@@ -1,0 +1,126 @@
+"""Projection benchmarks — paper Figs. 1-3 (+ JAX/TPU-variant comparison).
+
+Each function returns rows: (name, us_per_call, derived) where `derived`
+carries the figure's x-axis context (radius, sparsity, size).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (project_l1inf_heap, project_l1inf_naive,
+                        project_l1inf_quattoni, project_l1inf_bejar,
+                        project_l1inf_newton_np, project_l1inf_newton,
+                        project_l1inf_sorted)
+from repro.kernels.l1inf import project_l1inf_pallas
+
+Row = Tuple[str, float, str]
+
+
+def _time_np(fn: Callable, Y, C, reps: int = 3) -> float:
+    fn(Y, C)  # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(Y, C)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _time_jax(fn: Callable, Y, C, reps: int = 5) -> float:
+    Yj = jnp.asarray(Y, jnp.float32)
+    fn(Yj, C).block_until_ready()  # compile+warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(Yj, C).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _sparsity(X) -> float:
+    X = np.asarray(X)
+    return 100.0 * float((np.abs(X).max(axis=0) <= 1e-12).mean())
+
+
+CPU_METHODS = [
+    ("heap[paper-Alg2]", project_l1inf_heap),
+    ("newton_np[Chu-class]", project_l1inf_newton_np),
+    ("quattoni[total-order]", project_l1inf_quattoni),
+    ("bejar[elim+naive]", project_l1inf_bejar),
+]
+
+JAX_METHODS = [
+    ("jax_newton", lambda Y, C: project_l1inf_newton(Y, C)),
+    ("jax_sorted", lambda Y, C: project_l1inf_sorted(Y, C)),
+]
+
+
+def fig1_radius_sweep(n: int = 1000, m: int = 1000,
+                      radii=(0.001, 0.01, 0.1, 1.0, 4.0, 8.0),
+                      include_slow: bool = False) -> List[Row]:
+    """Fig. 1: projection time vs radius (sparsity decreases with radius)."""
+    rng = np.random.default_rng(0)
+    Y = rng.uniform(0, 1, size=(n, m))
+    rows: List[Row] = []
+    for C in radii:
+        Xref = project_l1inf_heap(Y, C)
+        sp = _sparsity(Xref)
+        for name, fn in CPU_METHODS:
+            if fn is project_l1inf_naive and not include_slow:
+                continue
+            us = _time_np(fn, Y, C)
+            rows.append((f"fig1/{name}", us, f"C={C};colsp={sp:.1f}%"))
+        for name, fn in JAX_METHODS:
+            us = _time_jax(fn, Y, C)
+            rows.append((f"fig1/{name}", us, f"C={C};colsp={sp:.1f}%"))
+    return rows
+
+
+def fig2_shape_sweep() -> List[Row]:
+    """Fig. 2: 1000x10000 and 10000x1000 at a few radii."""
+    rng = np.random.default_rng(1)
+    rows: List[Row] = []
+    for (n, m) in ((1000, 10000), (10000, 1000)):
+        Y = rng.uniform(0, 1, size=(n, m))
+        for C in (0.1, 1.0, 4.0):
+            sp = _sparsity(project_l1inf_heap(Y, C))
+            for name, fn in CPU_METHODS:
+                us = _time_np(fn, Y, C, reps=2)
+                rows.append((f"fig2/{name}@{n}x{m}", us,
+                             f"C={C};colsp={sp:.1f}%"))
+    return rows
+
+
+def fig3_size_growth() -> List[Row]:
+    """Fig. 3: growth with fixed n (left) and fixed m (right), C=1."""
+    rng = np.random.default_rng(2)
+    rows: List[Row] = []
+    for m in (500, 1000, 2000, 4000):
+        Y = rng.uniform(0, 1, size=(1000, m))
+        for name, fn in CPU_METHODS:
+            rows.append((f"fig3/fixed_n/{name}@1000x{m}",
+                         _time_np(fn, Y, 1.0, reps=2), "C=1"))
+    for n in (500, 1000, 2000, 4000):
+        Y = rng.uniform(0, 1, size=(n, 1000))
+        for name, fn in CPU_METHODS:
+            rows.append((f"fig3/fixed_m/{name}@{n}x1000",
+                         _time_np(fn, Y, 1.0, reps=2), "C=1"))
+    return rows
+
+
+def jax_variants(n: int = 512, m: int = 512) -> List[Row]:
+    """Beyond-paper: the TPU-adapted variants incl. the Pallas sort-free path
+    (interpret mode on CPU — structural comparison, not TPU wall-time)."""
+    rng = np.random.default_rng(3)
+    Y = rng.uniform(0, 1, size=(n, m))
+    rows: List[Row] = []
+    for C in (0.1, 2.0):
+        sp = _sparsity(project_l1inf_heap(Y, C))
+        for name, fn in JAX_METHODS:
+            rows.append((f"jaxvar/{name}", _time_jax(fn, Y, C),
+                         f"C={C};colsp={sp:.1f}%"))
+        us = _time_jax(lambda Yj, C=C: project_l1inf_pallas(
+            Yj, C, interpret=True), Y, C, reps=1)
+        rows.append((f"jaxvar/pallas_interp", us, f"C={C};colsp={sp:.1f}%"))
+    return rows

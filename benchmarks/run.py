@@ -1,0 +1,61 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Default scale completes on a
+single CPU core in ~20-30 min; ``--full`` uses the paper's exact sizes;
+``--only PREFIX`` filters benches; ``--quick`` trims to a smoke pass.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-exact sizes (slow on 1 CPU core)")
+    ap.add_argument("--quick", action="store_true",
+                    help="minimal smoke pass")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    from . import proj_bench, sae_bench
+
+    benches = []
+    if args.quick:
+        benches = [
+            ("fig1", lambda: proj_bench.fig1_radius_sweep(
+                n=200, m=200, radii=(0.01, 1.0))),
+            ("jaxvar", lambda: proj_bench.jax_variants(n=128, m=128)),
+        ]
+    else:
+        benches = [
+            ("fig1", lambda: proj_bench.fig1_radius_sweep()),
+            ("fig2", proj_bench.fig2_shape_sweep),
+            ("fig3", proj_bench.fig3_size_growth),
+            ("jaxvar", proj_bench.jax_variants),
+            ("table1", lambda: sae_bench.table1_synthetic(full=args.full)),
+            ("table2", sae_bench.table2_lung),
+            ("fig5-8", sae_bench.fig_radius_curves),
+        ]
+    if args.only:
+        benches = [(n, f) for n, f in benches if n.startswith(args.only)]
+
+    print("name,us_per_call,derived")
+    for bname, fn in benches:
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception:
+            traceback.print_exc()
+            print(f"{bname}/ERROR,0,failed", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {bname} wall {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

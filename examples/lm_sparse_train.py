@@ -1,0 +1,59 @@
+"""End-to-end driver: train an LM with the paper's l1,inf structured
+sparsity applied to the MLP in-projections during training — the framework's
+first-class integration of the projection.
+
+Default is a CPU-scale model (~5M params, 200 steps, a few minutes).
+``--hundred-m`` selects a ~100M-param config (same code path; budget
+permitting). On the production mesh the identical step is what the dry-run
+lowers at 512 chips.
+
+    PYTHONPATH=src python examples/lm_sparse_train.py
+    PYTHONPATH=src python examples/lm_sparse_train.py --steps 300 --hundred-m
+"""
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_config
+from repro.core import ProjectionSpec
+from repro.models.zoo import build, reduce_config
+from repro.data.pipeline import SyntheticLM, LMBatcher
+from repro.train.loop import TrainConfig, train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--hundred-m", action="store_true")
+ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+args = ap.parse_args()
+
+base = get_config("gemma_7b")
+if args.hundred_m:
+    cfg = dataclasses.replace(
+        reduce_config(base), n_layers=8, d_model=512, n_heads=8,
+        n_kv_heads=8, head_dim=64, d_ff=2048, vocab=32000,
+        q_chunk=128, kv_chunk=128)
+    batch, seq = 8, 256
+else:
+    cfg = dataclasses.replace(
+        reduce_config(base), n_layers=4, d_model=256, n_heads=4,
+        n_kv_heads=4, head_dim=64, d_ff=1024, vocab=8192,
+        q_chunk=64, kv_chunk=64)
+    batch, seq = 8, 128
+cfg = dataclasses.replace(
+    cfg,
+    projection_specs=(ProjectionSpec(pattern=r"blocks/.*/mlp/w1$",
+                                     norm="l1inf", radius=12.0, axis=0,
+                                     every_k=10),))
+
+model = build(cfg)
+print(f"model: {model.n_params()/1e6:.1f}M params on {jax.devices()[0].platform}")
+
+batcher = LMBatcher(SyntheticLM(cfg.vocab, seed=0), batch, seq)
+out = train(model, batcher,
+            TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
+                        ckpt_dir=args.ckpt_dir, lr=1e-3,
+                        with_projection=True))
+print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+for k, v in out["sparsity"].items():
+    print(f"column sparsity {k}: {v:.1f}%")

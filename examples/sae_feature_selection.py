@@ -1,0 +1,32 @@
+"""Paper reproduction at example scale: supervised autoencoder + l1,inf
+double descent for biomarker-style feature selection (paper §5-6).
+
+    PYTHONPATH=src python examples/sae_feature_selection.py
+"""
+import numpy as np
+
+from repro.core import ProjectionSpec
+from repro.sae import (SAEConfig, SAETrainConfig, make_classification,
+                       train_test_split, train_sae)
+
+D, INFORMATIVE = 2000, 32
+X, y, inf_idx = make_classification(
+    n_samples=800, n_features=D, n_informative=INFORMATIVE,
+    class_sep=1.0, seed=0)
+X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+Xtr, ytr, Xte, yte = train_test_split(X, y, 0.2, seed=0)
+
+for name, spec in [
+    ("baseline (no projection)", None),
+    ("l1,inf projected (Algorithm 3)",
+     ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.2, axis=1)),
+]:
+    res = train_sae(Xtr, ytr, Xte, yte,
+                    SAEConfig(n_features=D, n_hidden=96, n_classes=2),
+                    SAETrainConfig(epochs=25, lr=2e-3, projection=spec,
+                                   seed=0))
+    sel = res.selected
+    hits = np.intersect1d(sel, inf_idx).size if len(sel) else 0
+    print(f"{name:35s} acc={res.test_accuracy*100:5.2f}%  "
+          f"colsp={res.column_sparsity:5.1f}%  "
+          f"selected={len(sel):4d}  informative-recovered={hits}/{INFORMATIVE}")

@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Probe: compile one cell and list the largest buffers in the optimized HLO
+(debugging memory blowups)."""
+import re
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from collections import Counter
+
+from repro.configs import get_config
+from repro.models.zoo import build
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import lower_cell
+
+DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+      "f32": 4, "s64": 8, "f64": 8, "u16": 2, "s16": 2}
+
+arch, shape = sys.argv[1], sys.argv[2]
+cfg = get_config(arch)
+model = build(cfg)
+mesh = make_production_mesh(multi_pod=False)
+cell = lower_cell(model, shape, mesh, False)
+compiled = cell.compile()
+print(compiled.memory_analysis())
+hlo = compiled.as_text()
+
+sizes = Counter()
+for m in re.finditer(r"\b(bf16|f32|f16|s32|u32|pred|s8|u8)\[([0-9,]+)\]", hlo):
+    n = 1
+    for d in m.group(2).split(","):
+        n *= int(d)
+    b = n * DT[m.group(1)]
+    if b > 100_000_000:
+        sizes[f"{m.group(1)}[{m.group(2)}]"] += 1
+
+for shape_s, count in sorted(sizes.items(),
+                             key=lambda kv: -eval(kv[0].split('[')[1][:-1].replace(',', '*')) ):
+    dt = shape_s.split("[")[0]
+    n = 1
+    for d in shape_s.split("[")[1][:-1].split(","):
+        n *= int(d)
+    print(f"{n*DT[dt]/1e9:8.2f} GB  x{count:4d}  {shape_s}")

@@ -1,0 +1,52 @@
+"""Re-run roofline analysis offline from archived HLO (.hlo.zst) files,
+rewriting the JSON records — lets the parser evolve without recompiling.
+
+    PYTHONPATH=src python scripts/reanalyze.py [pattern]
+"""
+import json
+import pathlib
+import sys
+
+import zstandard as zstd
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.models.zoo import build
+from repro.roofline.analysis import analyze, model_flops_for, active_params
+
+ROOT = pathlib.Path(__file__).resolve().parents[1] / "experiments"
+pattern = sys.argv[1] if len(sys.argv) > 1 else ""
+
+n_params_cache = {}
+for hf in sorted((ROOT / "hlo").glob(f"*{pattern}*.hlo.zst")):
+    name = hf.name[: -len(".hlo.zst")]
+    parts = name.split("__")
+    arch, shape, mesh_kind = parts[0], parts[1], parts[2]
+    tag = parts[3] if len(parts) > 3 else "baseline"
+    jf = ROOT / "dryrun" / f"{name}.json"
+    old = json.loads(jf.read_text()) if jf.exists() else {}
+    if old.get("status") not in (None, "ok"):
+        continue
+    hlo = zstd.ZstdDecompressor().decompress(hf.read_bytes()).decode()
+    cfg = get_config(arch)
+    if arch not in n_params_cache:
+        n_params_cache[arch] = build(cfg).n_params()
+    n_total = n_params_cache[arch]
+    n_active = active_params(cfg, n_total)
+    n_chips = 512 if mesh_kind == "multipod" else 256
+    cost = {"flops": old.get("flops_xla_raw", 0.0),
+            "bytes accessed": old.get("bytes_xla_raw", 0.0)}
+    rf = analyze(arch, shape, mesh_kind, n_chips, cost, hlo,
+                 model_flops_for(cfg, shape, n_total, n_active),
+                 memory_analysis=old.get("memory_analysis"))
+    rec = rf.to_json()
+    for k in ("status", "kind", "tag", "n_params_total", "n_params_active",
+              "lower_s", "compile_s", "hlo_bytes"):
+        if k in old:
+            rec[k] = old[k]
+    rec.setdefault("status", "ok")
+    jf.write_text(json.dumps(rec, indent=1, default=str))
+    print(f"{name}: compute={rf.compute_s:.3f}s memory={rf.memory_s:.3f}s "
+          f"coll={rf.collective_s:.3f}s dom={rf.dominant} "
+          f"useful={rf.useful_ratio:.2f} frac={rf.roofline_fraction:.3f}")

@@ -1,0 +1,2 @@
+from .ckpt import (save, restore, restore_tree, latest_step, gc_keep_last,
+                   AsyncCheckpointer)

@@ -1,0 +1,151 @@
+"""Training-time integration: structured-sparsity constraints on param pytrees.
+
+A ``ProjectionSpec`` selects parameter leaves by path regex and applies one of
+the ball projections after each optimizer update (projected gradient descent,
+the paper's Algorithm 3). Leaves with more than 2 dims (scan-stacked layers,
+stacked experts) are vmapped over their leading dims so the constraint applies
+per layer / per expert.
+
+This module is what makes the paper's technique a first-class framework
+feature: every arch config carries a tuple of specs (see configs/*.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .l1inf import project_l1inf_newton, project_l1inf_sorted
+from .masked import project_l1inf_masked
+from .norms import project_l1_ball, project_l12_ball
+
+__all__ = ["ProjectionSpec", "apply_constraints", "column_masks",
+           "apply_masks", "sparsity_report", "leaf_path_str"]
+
+_NORMS = {"l1inf", "l1inf_sorted", "l1inf_masked", "l1", "l12"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionSpec:
+    """One structured-sparsity constraint.
+
+    pattern:  regex matched against the '/'-joined param path.
+    norm:     l1inf | l1inf_sorted | l1inf_masked | l1 | l12
+    radius:   ball radius C (> 0).
+    axis:     the *max* axis of the trailing 2-D slice (paper: 0 — columns
+              are prunable structures along the other axis).
+    every_k:  apply every k optimizer steps (1 = every step).
+    """
+    pattern: str
+    norm: str = "l1inf"
+    radius: float = 1.0
+    axis: int = 0
+    every_k: int = 1
+
+    def __post_init__(self):
+        if self.norm not in _NORMS:
+            raise ValueError(f"unknown norm {self.norm!r}")
+        if self.radius <= 0:
+            raise ValueError("radius must be > 0")
+
+
+def leaf_path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _project_fn(norm: str) -> Callable:
+    return {
+        "l1inf": lambda x, C, axis: project_l1inf_newton(x, C, axis=axis),
+        "l1inf_sorted": lambda x, C, axis: project_l1inf_sorted(x, C, axis=axis),
+        "l1inf_masked": lambda x, C, axis: project_l1inf_masked(x, C, axis=axis),
+        "l1": lambda x, C, axis: project_l1_ball(x, C),
+        "l12": lambda x, C, axis: project_l12_ball(x, C, axis=axis),
+    }[norm]
+
+
+def _apply_2d(fn: Callable, x: jnp.ndarray, C: float, axis: int) -> jnp.ndarray:
+    """Apply a 2-D projection to the trailing 2 dims, vmapping leading dims."""
+    if x.ndim < 2:
+        raise ValueError(f"projection target must have >=2 dims, got {x.shape}")
+    if x.ndim == 2:
+        return fn(x, C, axis)
+    lead = x.shape[: x.ndim - 2]
+    flat = x.reshape((-1,) + x.shape[-2:])
+    out = jax.vmap(lambda m: fn(m, C, axis))(flat)
+    return out.reshape(lead + x.shape[-2:])
+
+
+def apply_constraints(params: Any, specs: Sequence[ProjectionSpec],
+                      step: Optional[jnp.ndarray] = None) -> Any:
+    """Project matching leaves of `params`. jit-safe (cond on step % every_k)."""
+    if not specs:
+        return params
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    leaves = []
+    for path, leaf in flat:
+        name = leaf_path_str(path)
+        out = leaf
+        for spec in specs:
+            if re.search(spec.pattern, name) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+                fn = _project_fn(spec.norm)
+                projected = _apply_2d(fn, out, spec.radius, spec.axis)
+                if step is not None and spec.every_k > 1:
+                    do = (step % spec.every_k) == 0
+                    out = jax.tree_util.tree_map(
+                        lambda p, o: jnp.where(do, p, o), projected, out)
+                else:
+                    out = projected
+                break  # first matching spec wins
+        leaves.append(out)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def column_masks(params: Any, specs: Sequence[ProjectionSpec]) -> Any:
+    """Per-leaf {0,1} masks from the current column support of matching leaves
+    (the paper's double-descent mask M0). Non-matching leaves get ones."""
+    def one(path, leaf):
+        name = leaf_path_str(path)
+        for spec in specs:
+            if re.search(spec.pattern, name) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+                nz = jnp.any(leaf != 0, axis=spec.axis if leaf.ndim == 2 else
+                             (spec.axis - 2 if spec.axis < 0 else spec.axis + leaf.ndim - 2),
+                             keepdims=True)
+                return jnp.broadcast_to(nz, leaf.shape).astype(leaf.dtype)
+        return jnp.ones_like(leaf)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def apply_masks(tree: Any, masks: Any) -> Any:
+    """Elementwise tree * mask (grad masking of Algorithm 3)."""
+    return jax.tree_util.tree_map(lambda t, m: t * m, tree, masks)
+
+
+def sparsity_report(params: Any, specs: Sequence[ProjectionSpec]) -> dict:
+    """Column sparsity (%) per matching leaf — the paper's `Colsp` metric."""
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for path, leaf in flat:
+        name = leaf_path_str(path)
+        for spec in specs:
+            if re.search(spec.pattern, name) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
+                mat = leaf.reshape((-1,) + leaf.shape[-2:]) if leaf.ndim > 2 else leaf[None]
+                ax = spec.axis + 1 if spec.axis >= 0 else spec.axis
+                dead = jnp.all(mat == 0, axis=ax)
+                out[name] = float(100.0 * jnp.mean(dead.astype(jnp.float32)))
+                break
+    return out

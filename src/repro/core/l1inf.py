@@ -1,0 +1,268 @@
+"""Projection onto the l1,inf ball — TPU-native JAX implementations.
+
+Paper: Perez, Condat, Barlaud, "Near-Linear Time Projection onto the l1,inf
+Ball; Application to Sparse Autoencoders" (2023).
+
+Math recap (see DESIGN.md §1). For Y in R^{n x m} (columns indexed by j, the
+max is taken over the n rows within each column):
+
+    ||Y||_{1,inf} = sum_j max_i |Y_ij|.
+
+The projection factorizes through a scalar threshold theta >= 0:
+  * column j is zeroed iff ||y_j||_1 <= theta,
+  * otherwise it is clipped at mu_j where sum_i (|y_ij| - mu_j)_+ = theta,
+  * theta solves g(theta) := sum_j mu_j(theta) = C.
+
+With per-column descending sort z_1 >= ... >= z_n, prefix sums S_k, the
+*breakpoints* of the piecewise-linear convex decreasing g are
+
+    b_k = S_k - k z_{k+1} (k < n),   b_n = S_n  (column death).
+
+On the segment theta in (b_{k_j-1}, b_{k_j}] of each column, Eq. (19) of the
+paper gives theta = (sum_A S_{k_j}/k_j - C) / (sum_A 1/k_j) over the active
+set A.
+
+Two exact implementations, both jit/pjit/vmap-safe:
+
+  * ``project_l1inf_sorted``  — vectorized total order (Quattoni, TPU-native):
+    one global sort of all nm breakpoints + prefix scan of slope payloads,
+    then select the unique segment. O(nm log nm) work, ~15 parallel ops.
+  * ``project_l1inf_newton``  — semismooth Newton on theta (Chu-class, the
+    production path): per-column sort once, then finitely-convergent monotone
+    Newton iterations, each a vectorized compare-and-sum.
+
+The paper's own heap algorithm (inherently sequential) lives in
+``repro.core.heap`` as the faithful CPU reference; see DESIGN.md §2 for the
+hardware-adaptation rationale.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "l1inf_norm",
+    "project_l1inf",
+    "project_l1inf_sorted",
+    "project_l1inf_newton",
+    "theta_l1inf",
+    "column_support",
+]
+
+
+def l1inf_norm(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """||Y||_{1,inf}: sum over columns of the max |.| within each column.
+
+    `axis` is the *max* axis (paper convention: axis=0, columns are axis 1).
+    """
+    return jnp.sum(jnp.max(jnp.abs(Y), axis=axis))
+
+
+def column_support(X: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Boolean per-column support (True where the column is not all-zero)."""
+    return jnp.any(X != 0, axis=axis)
+
+
+# -----------------------------------------------------------------------------
+# shared pieces
+# -----------------------------------------------------------------------------
+
+def _sorted_stats(A: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Per-column descending sort Z, prefix sums S (1-based: S[k-1]=S_k), and
+    the (n, m) breakpoint matrix b (rows k=1..n-1 transitions, last row death).
+
+    A: (n, m) nonnegative. Returned b is non-decreasing along axis 0.
+    """
+    n, m = A.shape
+    Z = -jnp.sort(-A, axis=0)               # descending
+    S = jnp.cumsum(Z, axis=0)               # S[k-1, j] = S_k
+    k = jnp.arange(1, n, dtype=A.dtype)[:, None]
+    b_trans = S[: n - 1] - k * Z[1:]        # b_k = S_k - k z_{k+1}, k=1..n-1
+    b_death = S[n - 1 : n]                  # b_n = S_n
+    b = jnp.concatenate([b_trans, b_death], axis=0)
+    return Z, S, b
+
+
+def _theta_state(S: jnp.ndarray, b: jnp.ndarray, theta: jnp.ndarray):
+    """Per-column segment state at threshold `theta`.
+
+    Returns (k, S_k, active): k in [1, n] the active count, S_k the prefix sum
+    at k, active=False where the column is dominated (theta >= b_n = S_n).
+
+    Vectorized compare-and-sum (no searchsorted): O(nm) but a single fused
+    compare+reduce, GSPMD-friendly.
+    """
+    n = S.shape[0]
+    dt = S.dtype
+    idx = jnp.sum((b < theta).astype(jnp.int32), axis=0)       # in [0, n]
+    active = idx < n
+    k = jnp.clip(idx + 1, 1, n)
+    S_k = jnp.take_along_axis(S, (k - 1)[None, :], axis=0)[0]
+    return k.astype(dt), S_k, active
+
+
+def _finalize(Y: jnp.ndarray, A: jnp.ndarray, S: jnp.ndarray, b: jnp.ndarray,
+              theta: jnp.ndarray) -> jnp.ndarray:
+    """Clip |Y| at the per-column water level implied by theta, restore signs."""
+    k, S_k, active = _theta_state(S, b, theta)
+    mu = jnp.where(active, (S_k - theta) / k, 0.0)
+    mu = jnp.maximum(mu, 0.0)
+    return jnp.sign(Y) * jnp.minimum(A, mu[None, :])
+
+
+def _newton_theta(S: jnp.ndarray, b: jnp.ndarray, C: jnp.ndarray,
+                  theta0: jnp.ndarray, max_iter: int = 32) -> jnp.ndarray:
+    """Monotone semismooth Newton for g(theta) = C. Finite convergence since g
+    is convex decreasing piecewise-linear and theta0 <= theta*."""
+    def step(theta):
+        k, S_k, active = _theta_state(S, b, theta)
+        Aa = jnp.sum(jnp.where(active, S_k / k, 0.0))
+        Ba = jnp.sum(jnp.where(active, 1.0 / k, 0.0))
+        # Ba > 0 guaranteed while theta <= theta* and C > 0
+        return (Aa - C) / jnp.maximum(Ba, jnp.finfo(S.dtype).tiny)
+
+    def cond(carry):
+        i, theta, prev = carry
+        return jnp.logical_and(i < max_iter, theta > prev)
+
+    def body(carry):
+        i, theta, _ = carry
+        return (i + 1, step(theta), theta)
+
+    theta1 = step(theta0)
+    _, theta, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(1), theta1, theta0))
+    return theta
+
+
+def _prep(Y: jnp.ndarray, axis: int):
+    if Y.ndim != 2:
+        raise ValueError(f"project_l1inf expects a 2-D matrix, got {Y.shape}")
+    if axis not in (0, 1, -1, -2):
+        raise ValueError("axis must index one of the two matrix dims")
+    transpose = axis in (1, -1)
+    Yt = Y.T if transpose else Y
+    dt = jnp.promote_types(Y.dtype, jnp.float32)
+    return Yt.astype(dt), transpose, dt
+
+
+def _post(X, Y, transpose):
+    X = X.T if transpose else X
+    return X.astype(Y.dtype)
+
+
+# -----------------------------------------------------------------------------
+# exact vectorized total order (Quattoni-class, TPU-native)
+# -----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def project_l1inf_sorted(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """Exact projection of Y onto {X : ||X||_{1,inf} <= C}.
+
+    Vectorized total-order algorithm: global sort of all breakpoints + prefix
+    scan of the (dA, dB) slope payloads, then select the unique segment t with
+    theta_t in (b_t, b_{t+1}]. A final Newton polish removes any fp boundary
+    wobble. `axis` is the max axis.
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    A = jnp.abs(Yt)
+    n, m = A.shape
+
+    Z, S, b = _sorted_stats(A)
+
+    # slope payloads for crossing each breakpoint left->right
+    k = jnp.arange(1, n, dtype=dt)[:, None]
+    dA_trans = S[1:] / (k + 1) - S[: n - 1] / k       # k -> k+1
+    dB_trans = jnp.broadcast_to(1.0 / (k + 1) - 1.0 / k, (n - 1, m))
+    dA_death = -(S[n - 1 : n] / n)                    # column removed
+    dB_death = jnp.full((1, m), -1.0 / n, dtype=dt)
+    dA = jnp.concatenate([dA_trans, dA_death], axis=0).reshape(-1)
+    dB = jnp.concatenate([dB_trans, dB_death], axis=0).reshape(-1)
+    bf = b.reshape(-1)
+
+    order = jnp.argsort(bf)
+    b_sorted = bf[order]
+    A0 = jnp.sum(S[0])                                # all columns at k=1
+    B0 = jnp.asarray(m, dtype=dt)
+    A_state = jnp.concatenate([A0[None], A0 + jnp.cumsum(dA[order])])
+    B_state = jnp.concatenate([B0[None], B0 + jnp.cumsum(dB[order])])
+
+    # segment t covers (lo_t, hi_t], t = 0..nm
+    lo = jnp.concatenate([jnp.zeros((1,), dt), b_sorted])
+    hi = jnp.concatenate([b_sorted, jnp.full((1,), jnp.inf, dt)])
+    safeB = jnp.maximum(B_state, jnp.finfo(dt).tiny)
+    theta_t = (A_state - C) / safeB
+    eps = jnp.finfo(dt).eps * jnp.maximum(jnp.abs(hi[:-1]).max(initial=1.0), 1.0)
+    valid = (B_state > 0) & (theta_t > lo - eps) & (theta_t <= hi + eps)
+    t = jnp.argmax(valid)                             # first valid segment
+    theta = jnp.maximum(theta_t[t], 0.0)
+
+    # Newton polish (exact active set => Eq. 19 exact; fixes boundary wobble)
+    theta = _newton_theta(S, b, C, theta, max_iter=4)
+
+    X = _finalize(Yt, A, S, b, theta)
+    inside = jnp.sum(Z[0]) <= C
+    X = jnp.where(inside, Yt, X)
+    X = jnp.where(C > 0, X, jnp.zeros_like(X))
+    return _post(X, Y, transpose)
+
+
+# -----------------------------------------------------------------------------
+# semismooth Newton (production path)
+# -----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("axis", "max_iter"))
+def project_l1inf_newton(Y: jnp.ndarray, C, axis: int = 0,
+                         max_iter: int = 32) -> jnp.ndarray:
+    """Exact projection via monotone semismooth Newton on theta.
+
+    One per-column sort + cumsum, then <= ~15 Newton steps, each a fused
+    compare-and-sum over the breakpoint matrix. This is the default inside
+    jitted/pjitted train steps (no global sort, no long prefix scans).
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    A = jnp.abs(Yt)
+    n, m = A.shape
+
+    Z, S, b = _sorted_stats(A)
+    # theta_0: Eq. (19) with every column active at k=1 (the paper's line 2)
+    theta0 = (jnp.sum(S[0]) - C) / m
+    theta0 = jnp.maximum(theta0, 0.0)
+    theta = _newton_theta(S, b, C, theta0, max_iter=max_iter)
+
+    X = _finalize(Yt, A, S, b, theta)
+    inside = jnp.sum(Z[0]) <= C
+    X = jnp.where(inside, Yt, X)
+    X = jnp.where(C > 0, X, jnp.zeros_like(X))
+    return _post(X, Y, transpose)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def theta_l1inf(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """The optimal threshold theta* (0 if Y is already inside the ball).
+
+    Used for the paper's Figs. 6/8 (theta as a function of the radius)."""
+    Yt, _, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    A = jnp.abs(Yt)
+    Z, S, b = _sorted_stats(A)
+    m = A.shape[1]
+    theta0 = jnp.maximum((jnp.sum(S[0]) - C) / m, 0.0)
+    theta = _newton_theta(S, b, C, theta0)
+    inside = jnp.sum(Z[0]) <= C
+    return jnp.where(inside, jnp.zeros_like(theta), theta)
+
+
+def project_l1inf(Y: jnp.ndarray, C, axis: int = 0,
+                  method: str = "newton") -> jnp.ndarray:
+    """Dispatcher. method in {"newton", "sorted"}."""
+    if method == "newton":
+        return project_l1inf_newton(Y, C, axis=axis)
+    if method == "sorted":
+        return project_l1inf_sorted(Y, C, axis=axis)
+    raise ValueError(f"unknown method {method!r}")

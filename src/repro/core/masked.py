@@ -1,0 +1,32 @@
+"""Masked l1,inf projection (paper Eq. 20).
+
+Keeps the original magnitudes but zeroes exactly the support removed by the
+real projection: X = Y if inside the ball, else Y * sign(P(|Y|)). Only whole
+dominated columns (mu_j = 0) are zeroed; surviving entries are NOT clipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .l1inf import project_l1inf_newton, l1inf_norm
+
+__all__ = ["project_l1inf_masked", "l1inf_column_mask"]
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def l1inf_column_mask(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """Boolean per-column mask: True for columns surviving P_{B_{1,inf}^C}."""
+    P = project_l1inf_newton(jnp.abs(Y), C, axis=axis)
+    return jnp.any(P > 0, axis=axis)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def project_l1inf_masked(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """Masked projection P^M (Eq. 20)."""
+    inside = l1inf_norm(Y, axis=axis) <= C
+    P = project_l1inf_newton(jnp.abs(Y), C, axis=axis)
+    masked = Y * jnp.sign(P)
+    return jnp.where(inside, Y, masked)

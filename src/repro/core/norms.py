@@ -1,0 +1,59 @@
+"""The comparison norms of the SAE experiments and the Moreau-dual prox.
+
+  * l1 ball on the flattened matrix            (paper's `l1` column)
+  * l1,2 / group-lasso ball (sum of column l2) (paper's `l2,1` column)
+  * prox of the l_inf,1 norm via Moreau + the l1,inf projection (Eq. 16)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .simplex import project_l1_ball, simplex_threshold
+from .l1inf import project_l1inf_newton
+
+__all__ = [
+    "project_l1_ball",
+    "project_l12_ball",
+    "prox_linf1",
+    "linf1_norm",
+    "l12_norm",
+]
+
+
+def l12_norm(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """sum_j ||y_j||_2 (column l2 norms summed; group-lasso norm)."""
+    return jnp.sum(jnp.sqrt(jnp.sum(Y * Y, axis=axis)))
+
+
+def linf1_norm(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """max_j sum_i |Y_ij| — the dual of the l1,inf norm (Eq. 14)."""
+    return jnp.max(jnp.sum(jnp.abs(Y), axis=axis))
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def project_l12_ball(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """Projection onto {X : sum_j ||x_j||_2 <= C} (group-lasso ball).
+
+    Column norms are projected onto the l1 ball; columns are rescaled.
+    """
+    dt = jnp.promote_types(Y.dtype, jnp.float32)
+    Yf = Y.astype(dt)
+    C = jnp.asarray(C, dtype=dt)
+    nu = jnp.sqrt(jnp.sum(Yf * Yf, axis=axis))
+    inside = jnp.sum(nu) <= C
+    tau = simplex_threshold(nu, C, axis=0)
+    nu_new = jnp.maximum(nu - tau, 0.0)
+    scale = jnp.where(nu > 0, nu_new / jnp.maximum(nu, jnp.finfo(dt).tiny), 0.0)
+    X = Yf * jnp.expand_dims(scale, axis)
+    X = jnp.where(inside, Yf, X)
+    X = jnp.where(C > 0, X, jnp.zeros_like(X))
+    return X.astype(Y.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def prox_linf1(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
+    """prox_{C ||.||_inf,1}(Y) = Y - P_{B_{1,inf}^C}(Y)  (Moreau, Eq. 16)."""
+    return Y - project_l1inf_newton(Y, C, axis=axis)

@@ -1,0 +1,142 @@
+"""Projections onto the simplex and the l1 ball.
+
+These are the building blocks of the paper's l1,inf machinery (every column
+sub-problem is a simplex projection) and the l1 comparison method of the SAE
+experiments.
+
+All jnp functions are jit/vmap/pjit-safe (static shapes, lax control flow).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "project_simplex_sort",
+    "project_l1_ball",
+    "project_weighted_l1_ball",
+    "simplex_threshold",
+    "project_simplex_michelot_np",
+    "project_simplex_condat_np",
+]
+
+
+def simplex_threshold(y: jnp.ndarray, radius, axis: int = -1) -> jnp.ndarray:
+    """Water-level tau such that sum(max(y - tau, 0)) == radius along `axis`.
+
+    Assumes ``sum(max(y,0)) >= radius`` (caller handles the interior case) and
+    y >= 0 is NOT required — standard sort formulation works for any y.
+
+    Sort-based O(n log n): tau = (cumsum_k - radius)/k for the largest valid k.
+    """
+    y = jnp.asarray(y)
+    u = jnp.sort(y, axis=axis)
+    u = jnp.flip(u, axis=axis)  # descending
+    css = jnp.cumsum(u, axis=axis)
+    n = y.shape[axis]
+    k = jnp.arange(1, n + 1, dtype=y.dtype)
+    shape = [1] * y.ndim
+    shape[axis] = n
+    k = k.reshape(shape)
+    # valid(k): u_k > (css_k - radius)/k
+    valid = u * k > (css - radius)
+    # rho = last valid k (>= 1 always when sum(y) > radius and radius > 0)
+    rho_idx = jnp.sum(valid.astype(jnp.int32), axis=axis, keepdims=True) - 1
+    rho_idx = jnp.clip(rho_idx, 0, n - 1)
+    css_rho = jnp.take_along_axis(css, rho_idx, axis=axis)
+    tau = (css_rho - radius) / (rho_idx.astype(y.dtype) + 1.0)
+    return jnp.squeeze(tau, axis=axis)
+
+
+def project_simplex_sort(y: jnp.ndarray, radius=1.0, axis: int = -1) -> jnp.ndarray:
+    """Euclidean projection of y onto the solid simplex
+    {x >= 0 : sum(x) <= radius} along `axis`.
+
+    If y is already inside (y >= 0 elementwise and sum <= radius) returns y.
+    """
+    y = jnp.asarray(y)
+    radius = jnp.asarray(radius, dtype=y.dtype)
+    tau = simplex_threshold(y, radius, axis=axis)
+    proj = jnp.maximum(y - jnp.expand_dims(tau, axis), 0.0)
+    inside = jnp.logical_and(
+        jnp.all(y >= 0, axis=axis), jnp.sum(y, axis=axis) <= radius
+    )
+    return jnp.where(jnp.expand_dims(inside, axis), y, proj)
+
+
+def project_l1_ball(y: jnp.ndarray, radius=1.0) -> jnp.ndarray:
+    """Euclidean projection of (flattened) y onto the l1 ball of `radius`."""
+    y = jnp.asarray(y)
+    radius = jnp.asarray(radius, dtype=y.dtype)
+    flat = jnp.abs(y).reshape(-1)
+    inside = jnp.sum(flat) <= radius
+    tau = simplex_threshold(flat, radius, axis=0)
+    proj = jnp.sign(y) * jnp.maximum(jnp.abs(y) - tau, 0.0)
+    return jnp.where(inside, y, proj)
+
+
+def project_weighted_l1_ball(y: jnp.ndarray, w: jnp.ndarray, radius=1.0) -> jnp.ndarray:
+    """Projection onto {x : sum_i w_i |x_i| <= radius}, w > 0 (Perez et al. 2022).
+
+    KKT: x_i = sign(y_i) max(|y_i| - tau w_i, 0) with
+    tau = (sum_{i in A} w_i|y_i| - radius)/ sum_{i in A} w_i^2 over the active set.
+    Solved by sorting |y_i|/w_i descending.
+    """
+    y = jnp.asarray(y)
+    w = jnp.asarray(w, dtype=y.dtype)
+    a = jnp.abs(y).reshape(-1)
+    ww = jnp.broadcast_to(w, y.shape).reshape(-1)
+    inside = jnp.sum(ww * a) <= radius
+    r = a / ww
+    order = jnp.argsort(-r)
+    wa = (ww * a)[order]
+    w2 = (ww * ww)[order]
+    cwa = jnp.cumsum(wa)
+    cw2 = jnp.cumsum(w2)
+    taus = (cwa - radius) / cw2
+    # active set: r_sorted_k > taus_k
+    valid = r[order] > taus
+    rho = jnp.clip(jnp.sum(valid.astype(jnp.int32)) - 1, 0, a.shape[0] - 1)
+    tau = jnp.maximum(taus[rho], 0.0)
+    proj = jnp.sign(y) * jnp.maximum(jnp.abs(y) - tau * jnp.broadcast_to(w, y.shape), 0.0)
+    return jnp.where(inside, y, proj)
+
+
+# ----------------------------------------------------------------------------
+# Numpy reference algorithms (for benchmarks and cross-checks)
+# ----------------------------------------------------------------------------
+
+def project_simplex_michelot_np(y: np.ndarray, radius: float = 1.0) -> np.ndarray:
+    """Michelot's iterative active-set algorithm (numpy, exact)."""
+    y = np.asarray(y, dtype=np.float64)
+    if y.min() >= 0 and y.sum() <= radius:
+        return y.copy()
+    v = y.copy()
+    rho = (v.sum() - radius) / v.size
+    while True:
+        v2 = v[v > rho]
+        if v2.size == v.size:
+            break
+        v = v2
+        if v.size == 0:
+            rho = 0.0
+            break
+        rho = (v.sum() - radius) / v.size
+    return np.maximum(y - rho, 0.0)
+
+
+def project_simplex_condat_np(y: np.ndarray, radius: float = 1.0) -> np.ndarray:
+    """Condat (2016) fast projection (numpy port, exact, O(n) expected)."""
+    y = np.asarray(y, dtype=np.float64)
+    if y.min() >= 0 and y.sum() <= radius:
+        return y.copy()
+    # Fall back to the sorted method; Condat's scan is pointer-heavy in python,
+    # the sorted method is both exact and fast enough in numpy for our benches.
+    u = np.sort(y)[::-1]
+    css = np.cumsum(u)
+    k = np.arange(1, y.size + 1)
+    valid = u * k > (css - radius)
+    rho = np.nonzero(valid)[0][-1]
+    tau = (css[rho] - radius) / (rho + 1.0)
+    return np.maximum(y - tau, 0.0)

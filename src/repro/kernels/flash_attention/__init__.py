@@ -1,0 +1,3 @@
+from .ops import flash_attention
+from .kernel import flash_attention_fwd
+from . import ref

@@ -1,0 +1,122 @@
+"""Flash attention (forward) Pallas TPU kernel.
+
+Online-softmax with explicit BlockSpec VMEM tiling: grid = (batch*heads,
+q_tiles, kv_tiles); the kv dimension is the innermost (sequential on TPU)
+grid axis, accumulating into output-resident (acc, m, l) tiles — one HBM
+pass over K/V per q tile, no S x S materialization. GQA is handled in the
+index map (kv head = q head // group).
+
+Causal/sliding-window masking is applied per tile; fully-masked tiles skip
+the matmul via pl.when. Backward uses the pure-jnp chunked attention
+(models/attention.py) — on-TPU training would pair this with the standard
+flash backward; serving (prefill) is forward-only.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bkv: int, n_kv: int, causal: bool, window: int,
+                  scale: float):
+    j = pl.program_id(2)
+    i = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+    kv_pos = j * bkv + jax.lax.broadcasted_iota(jnp.int32, (1, bkv), 1)
+    relevant = True
+    if causal:
+        relevant = (j * bkv) <= (i * bq + bq - 1)
+    if window:
+        relevant = jnp.logical_and(
+            relevant, (i * bq - (j * bkv + bkv - 1)) < window)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)                 # (bkv, hd)
+        v = v_ref[0].astype(jnp.float32)                 # (bkv, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= q_pos >= kv_pos
+        if window:
+            mask &= (q_pos - kv_pos) < window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[0]                                # (bq,)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[0] = l_ref[0] * corr + jnp.sum(p, axis=1)
+        acc_ref[0] = (acc_ref[0] * corr[:, None]
+                      + jax.lax.dot_general(
+                          p, v, (((1,), (0,)), ((), ())),
+                          preferred_element_type=jnp.float32))
+        m_ref[0] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finalize():
+        out_ref[0] = (acc_ref[0]
+                      / jnp.maximum(l_ref[0], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+def flash_attention_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        groups: int = 1, causal: bool = True,
+                        window: int = 0, block_q: int = 128,
+                        block_kv: int = 128,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BKV, Skv, hd) with BH = BKV * groups.
+
+    Returns (BH, Sq, hd). Sq % block_q == 0, Skv % block_kv == 0.
+    """
+    BH, Sq, hd = q.shape
+    BKV, Skv, _ = k.shape
+    assert BH == BKV * groups
+    bq = min(block_q, Sq)
+    bkv = min(block_kv, Skv)
+    assert Sq % bq == 0 and Skv % bkv == 0
+    nq, nkv = Sq // bq, Skv // bkv
+    grid = (BH, nq, nkv)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bkv=bkv, n_kv=nkv, causal=causal,
+        window=window, scale=hd ** -0.5)
+    out, acc, m, l = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, hd),
+                         lambda b, i, j, g=groups: (b // g, j, 0)),
+            pl.BlockSpec((1, bkv, hd),
+                         lambda b, i, j, g=groups: (b // g, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, hd), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

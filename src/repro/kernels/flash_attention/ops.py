@@ -1,0 +1,34 @@
+"""Jitted wrapper: model-shaped GQA flash attention.
+
+Accepts the model-layer layout (B, S, H, hd) / (B, S, KV, hd) and folds
+batch x heads into the kernel grid. Target is TPU; on CPU backends pass
+interpret=True (tests) — the models' jnp chunked attention remains the
+CPU/dry-run execution path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_kv: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    groups = H // KV
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    out = flash_attention_fwd(qf, kf, vf, groups=groups, causal=causal,
+                              window=window, block_q=block_q,
+                              block_kv=block_kv, interpret=interpret)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

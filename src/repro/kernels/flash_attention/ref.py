@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  groups: int = 1, causal: bool = True,
+                  window: int = 0) -> jnp.ndarray:
+    """q: (BH, Sq, hd); k/v: (BKV, Skv, hd), BH = BKV * groups."""
+    BH, Sq, hd = q.shape
+    BKV, Skv, _ = k.shape
+    k = jnp.repeat(k, groups, axis=0)
+    v = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None], p, 0.0)
+    out = jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from .ops import project_l1inf_pallas
+from .kernel import colstats, mu_solve, clip_apply
+from . import ref

@@ -1,0 +1,71 @@
+"""Pure-jnp oracle for the l1,inf Pallas kernel suite.
+
+Self-contained reference semantics for each kernel:
+  * column stats:   per-column (sum, max) of |Y|
+  * mu-solve:       per-column water level mu_j(theta) with exact active-set
+                    payloads (k_j, S_kj)
+  * clip-apply:     X = sign(Y) * min(|Y|, mu_j)
+  * full projection oracle (sort-based, exact)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def colstats_ref(Y: jnp.ndarray):
+    A = jnp.abs(Y.astype(jnp.float32))
+    return jnp.sum(A, axis=0), jnp.max(A, axis=0)
+
+
+def mu_solve_ref(Yabs: jnp.ndarray, theta: jnp.ndarray):
+    """Exact per-column water level for removed mass theta (sort-based).
+
+    Returns (mu, k, S_k, active): for active columns (colsum > theta),
+    sum_i (y - mu)_+ = theta with k = |{y > mu}|, S_k = sum of the top k.
+    Inactive columns report mu = 0, k = 1, S_k = 0.
+    """
+    A = jnp.abs(Yabs.astype(jnp.float32))
+    n, m = A.shape
+    theta = jnp.asarray(theta, jnp.float32)
+    Z = -jnp.sort(-A, axis=0)
+    S = jnp.cumsum(Z, axis=0)
+    k = jnp.arange(1, n + 1, dtype=jnp.float32)[:, None]
+    # largest k with z_k * k > S_k - theta  (simplex active set)
+    valid = Z * k > (S - theta)
+    kj = jnp.clip(jnp.sum(valid.astype(jnp.int32), axis=0), 1, n)
+    S_k = jnp.take_along_axis(S, (kj - 1)[None, :], axis=0)[0]
+    kf = kj.astype(jnp.float32)
+    mu = (S_k - theta) / kf
+    active = S[n - 1] > theta
+    mu = jnp.where(active, jnp.maximum(mu, 0.0), 0.0)
+    kf = jnp.where(active, kf, 1.0)
+    S_k = jnp.where(active, S_k, 0.0)
+    return mu, kf, S_k, active
+
+
+def clip_apply_ref(Y: jnp.ndarray, mu: jnp.ndarray):
+    A = jnp.abs(Y)
+    return (jnp.sign(Y) * jnp.minimum(A, mu[None, :].astype(Y.dtype))).astype(Y.dtype)
+
+
+def project_l1inf_ref(Y: jnp.ndarray, C) -> jnp.ndarray:
+    """Full exact projection oracle (per-column sort + scalar Newton)."""
+    A = jnp.abs(Y.astype(jnp.float32))
+    n, m = A.shape
+    C = jnp.asarray(C, jnp.float32)
+    colsum, colmax = colstats_ref(Y)
+    inside = jnp.sum(colmax) <= C
+
+    theta = jnp.maximum((jnp.sum(colmax) - C) / m, 0.0)
+    # monotone Newton (finite convergence; 64 is a safe cap)
+    def body(i, th):
+        mu, kf, S_k, active = mu_solve_ref(A, th)
+        Aa = jnp.sum(jnp.where(active, S_k / kf, 0.0))
+        Ba = jnp.sum(jnp.where(active, 1.0 / kf, 0.0))
+        return jnp.maximum((Aa - C) / jnp.maximum(Ba, 1e-30), th)
+    import jax
+    theta = jax.lax.fori_loop(0, 64, body, theta)
+    mu, _, _, _ = mu_solve_ref(A, theta)
+    X = clip_apply_ref(Y, mu)
+    X = jnp.where(inside, Y, X)
+    return jnp.where(C > 0, X, jnp.zeros_like(X))

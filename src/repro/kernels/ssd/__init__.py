@@ -1,0 +1,3 @@
+from .ops import ssd_attention
+from .kernel import ssd_fwd
+from . import ref

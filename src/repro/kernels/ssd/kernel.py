@@ -1,0 +1,109 @@
+"""Mamba2 SSD (state-space duality) chunked-scan Pallas TPU kernel.
+
+The jnp chunked SSD (models/ssm.py) materializes the (Q x Q) decay tile L
+and the (Q x Q) Gram tile C·Bᵀ in HBM for every chunk — the dominant memory
+term of the mamba2/hymba cells (EXPERIMENTS.md §Roofline). This kernel keeps
+both tiles in VMEM: grid = (batch*heads, chunks) with the chunk axis
+innermost (sequential on TPU); the inter-chunk SSM state (P x N) lives in an
+output-resident accumulator carried across grid steps.
+
+Per program (one chunk of one head):
+    da   = dt * a;  cum = cumsum(da)
+    L    = tril(exp(cum_i - cum_j))              (Q x Q, VMEM only)
+    G    = C Bᵀ                                  (Q x Q, VMEM only)
+    y    = (G ⊙ L ⊙ dt_j) x + (C ⊙ exp(cum)) hᵀ + D x
+    h'   = exp(Σda) h + Bᵀ (dt ⊙ exp(Σda - cum) ⊙ x)
+
+B/C are shared across the heads of a group via the index map (like GQA in
+the flash kernel). Forward only (training pairs it with recompute, like
+flash); validated in interpret mode against ref.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(a_ref, d_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref,
+                *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0, 0]                                   # scalar decay rate < 0
+    dcoef = d_ref[0, 0]                               # skip coefficient
+    x = x_ref[0].astype(jnp.float32)                  # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)                # (Q,)
+    B = b_ref[0].astype(jnp.float32)                  # (Q, N)
+    C = c_ref[0].astype(jnp.float32)                  # (Q, N)
+
+    da = dt * a                                       # (Q,)
+    cum = jnp.cumsum(da)
+    seg = cum[-1]
+
+    # intra-chunk: everything below stays in VMEM
+    diff = cum[:, None] - cum[None, :]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(q_idx >= k_idx, jnp.exp(diff), 0.0)
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    M = G * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk from the carried state h (P, N)
+    h = state_ref[0]                                  # (P, N)
+    Ce = C * jnp.exp(cum)[:, None]
+    y = y + jax.lax.dot_general(Ce, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + dcoef * x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: h' = exp(seg) h + xᵀ (dt * exp(seg - cum) * B)
+    w = (dt * jnp.exp(seg - cum))[:, None] * B        # (Q, N)
+    upd = jax.lax.dot_general(x, w, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[0] = jnp.exp(seg) * h + upd
+
+
+def ssd_fwd(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, *, chunk: int = 64,
+            groups: int = 1, interpret: bool = False):
+    """x: (BH, S, P); dt: (BH, S); a/d: (BH,); B/C: (BG, S, N) with
+    BH = BG * groups. Returns (y (BH, S, P), final_state (BH, P, N))."""
+    BH, S, P = x.shape
+    BG, _, N = B.shape
+    assert BH == BG * groups and S % chunk == 0
+    nc = S // chunk
+    grid = (BH, nc)
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),            # a
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),            # d
+            pl.BlockSpec((1, chunk, P), lambda b, j: (b, j, 0)),  # x
+            pl.BlockSpec((1, chunk), lambda b, j: (b, j)),        # dt
+            pl.BlockSpec((1, chunk, N),
+                         lambda b, j, g=groups: (b // g, j, 0)),  # B
+            pl.BlockSpec((1, chunk, N),
+                         lambda b, j, g=groups: (b // g, j, 0)),  # C
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, P, N), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.reshape(BH, 1), d.reshape(BH, 1), x, dt, B, C)
+    return y, state

@@ -1,0 +1,30 @@
+"""Jitted wrapper: model-shaped SSD via the Pallas kernel.
+
+Accepts the models/ssm.py tensor layout: x (B, S, H, P), dt (B, S, H),
+A_log/D (H,), B/C (B, S, N) (single group). Target TPU; interpret=True for
+CPU validation — the jnp chunked scan stays the dry-run execution path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import ssd_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_attention(x: jnp.ndarray, dt: jnp.ndarray, A_log: jnp.ndarray,
+                  D: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray, *,
+                  chunk: int = 64, interpret: bool = False) -> jnp.ndarray:
+    """x: (B, S, H, P); dt: (B, S, H); A_log/D: (H,); Bm/Cm: (B, S, N)."""
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    xf = x.transpose(0, 2, 1, 3).reshape(Bb * H, S, P)
+    dtf = dt.transpose(0, 2, 1).reshape(Bb * H, S)
+    a = jnp.tile(-jnp.exp(A_log.astype(jnp.float32)), Bb)
+    d = jnp.tile(D.astype(jnp.float32), Bb)
+    y, _ = ssd_fwd(xf, dtf, a, d, Bm, Cm, chunk=chunk, groups=H,
+                   interpret=interpret)
+    return y.reshape(Bb, H, S, P).transpose(0, 2, 1, 3)

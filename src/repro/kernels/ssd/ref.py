@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD kernel: the naive sequential recurrence.
+
+    h_t = exp(a dt_t) h_{t-1} + dt_t B_t x_tᵀ      (h in R^{P x N})
+    y_t = h_t C_t + D x_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray, d: jnp.ndarray,
+            B: jnp.ndarray, C: jnp.ndarray, groups: int = 1):
+    """x: (BH, S, P); dt: (BH, S); a/d: (BH,); B/C: (BG, S, N)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    Bf = jnp.repeat(B, groups, axis=0).astype(jnp.float32)
+    Cf = jnp.repeat(C, groups, axis=0).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def per_bh(x1, dt1, a1, d1, B1, C1):
+        def step(h, inp):
+            xt, dtt, bt, ct = inp
+            h = jnp.exp(a1 * dtt) * h + dtt * jnp.outer(xt, bt)
+            y = h @ ct + d1 * xt
+            return h, y
+
+        h0 = jnp.zeros((P, N), jnp.float32)
+        hT, ys = jax.lax.scan(step, h0, (x1, dt1, B1, C1))
+        return ys, hT
+
+    ys, hT = jax.vmap(per_bh)(xf, dtf, a.astype(jnp.float32),
+                              d.astype(jnp.float32), Bf, Cf)
+    return ys.astype(x.dtype), hT

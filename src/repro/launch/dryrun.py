@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init). Everything below is ordinary.
+#
+# Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell on
+# the production meshes, record memory analysis, cost analysis, and the
+# roofline terms parsed from the optimized HLO.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch gemma_7b --shape train_4k --mesh pod
+#   python -m repro.launch.dryrun --all            # every runnable cell
+#   python -m repro.launch.dryrun --list           # show the cell matrix
+#
+# One JSON per cell is written to experiments/dryrun/<cell>.json; failures
+# are recorded with the exception text (they are bugs — the sweep continues).
+# (no `from __future__` here: the XLA_FLAGS lines must be first)
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..models.zoo import build, SHAPES, cell_supported
+from ..roofline.analysis import (analyze, model_flops_for, active_params)
+from .mesh import make_production_mesh
+from .steps import lower_cell
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _mem_dict(ma) -> dict:
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    out["total_bytes_per_device"] = (
+        out.get("argument_size_in_bytes", 0)
+        + out.get("output_size_in_bytes", 0)
+        + out.get("temp_size_in_bytes", 0)
+        - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             extra_rules: dict | None = None,
+             config_overrides: dict | None = None,
+             tag: str = "") -> dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if config_overrides:
+        cfg = _dc.replace(cfg, **config_overrides)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                "status": "skipped", "reason": why}
+    multi_pod = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 512 if multi_pod else 256
+    model = build(cfg)
+    t0 = time.time()
+    cell = lower_cell(model, shape, mesh, multi_pod,
+                      extra_rules=extra_rules)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = cell.compile()
+    t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    print(ma)  # proves it fits (bytes per device)
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+
+    hlo = compiled.as_text()
+    # archive compressed HLO so roofline analysis can be re-run offline
+    try:
+        import zstandard as zstd
+        hlo_dir = OUT_DIR.parent / "hlo"
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape}__{mesh_kind}"
+        if tag and tag != "baseline":
+            name += f"__{tag}"
+        (hlo_dir / f"{name}.hlo.zst").write_bytes(
+            zstd.ZstdCompressor(level=6).compress(hlo.encode()))
+    except Exception as e:
+        print(f"[warn] HLO archive failed: {e}")
+    n_total = model.n_params()
+    n_active = active_params(cfg, n_total)
+    rf = analyze(arch, shape, mesh_kind, n_chips, cost, hlo,
+                 model_flops_for(cfg, shape, n_total, n_active),
+                 memory_analysis=_mem_dict(ma))
+    rec = rf.to_json()
+    rec.update({
+        "status": "ok", "kind": cell.kind, "tag": tag,
+        "n_params_total": n_total, "n_params_active": n_active,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_bytes": len(hlo),
+    })
+    return rec
+
+
+def cell_list():
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, why = cell_supported(cfg, shape)
+            for mesh_kind in ("pod", "multipod"):
+                cells.append((arch, shape, mesh_kind, ok, why))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--rules", default=None,
+                    help="JSON dict of logical-rule overrides (perf sweeps)")
+    ap.add_argument("--config-overrides", default=None,
+                    help="JSON dict of ArchConfig field overrides")
+    args = ap.parse_args()
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    if args.list:
+        for arch, shape, mesh_kind, ok, why in cell_list():
+            print(f"{arch:22s} {shape:12s} {mesh_kind:9s} "
+                  f"{'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    extra = json.loads(args.rules) if args.rules else None
+    cfg_over = (json.loads(args.config_overrides)
+                if args.config_overrides else None)
+    todo = ([(args.arch, args.shape, args.mesh)] if not args.all else
+            [(a, s, m) for a, s, m, ok, _ in cell_list()])
+    n_fail = 0
+    for arch, shape, mesh_kind in todo:
+        name = f"{arch}__{shape}__{mesh_kind}"
+        if args.tag != "baseline":
+            name += f"__{args.tag}"
+        out_path = OUT_DIR / f"{name}.json"
+        print(f"=== {name} ===", flush=True)
+        try:
+            rec = run_cell(arch, shape, mesh_kind, extra_rules=extra,
+                           config_overrides=cfg_over, tag=args.tag)
+        except Exception as e:  # a failure here is a bug; record and continue
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                   "status": "failed", "error": f"{type(e).__name__}: {e}",
+                   "tag": args.tag}
+            n_fail += 1
+        out_path.write_text(json.dumps(rec, indent=1, default=str))
+        print(json.dumps({k: rec.get(k) for k in
+                          ("status", "dominant", "compute_s", "memory_s",
+                           "collective_s", "roofline_fraction",
+                           "compile_s")}, default=str), flush=True)
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

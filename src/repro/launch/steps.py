@@ -1,0 +1,254 @@
+"""Production step builders + per-cell sharding rule selection.
+
+``build_train_step``  — loss + grads + Adam + the paper's l1,inf projection
+                        (full production step: optimizer state included so
+                        memory analysis reflects reality; params/opt donated).
+``build_prefill_step``— full forward, returns last-token logits.
+``build_decode_step`` — one-token serve step against a donated KV cache.
+
+``rules_for_cell`` picks the parallelism layout per (arch, shape, mesh):
+  train/prefill: DP(+pod) x TP(model) with FSDP-over-data weights;
+  decode:        DP over data, KV-cache sequence over model (flash-decoding
+                 style partial-softmax all-reduce);
+  long-context:  batch=1 -> cache sequence sharded over EVERY axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist.sharding import default_rules, axis_rules, logical_spec
+from ..models.zoo import Model, SHAPES
+from ..models.transformer import ArchConfig
+from ..optim import AdamConfig, AdamState, adam_init, adam_update
+from ..core import apply_constraints
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def rules_for_cell(cfg: ArchConfig, shape_name: str, multi_pod: bool) -> dict:
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+    rules = default_rules(multi_pod=multi_pod)
+    if kind == "decode":
+        if sh["batch"] == 1:
+            # long-context: all parallelism goes to the cache sequence
+            rules["batch"] = None
+            rules["cache_batch"] = None
+            rules["cache_seq"] = (("pod", "data", "model") if multi_pod
+                                  else ("data", "model"))
+            rules["kv_heads"] = None
+        else:
+            rules["cache_seq"] = "model"
+            rules["kv_heads"] = None      # seq took the model axis
+    rules.update(dict(cfg.rules_overrides))
+    return rules
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(batch_abstract: Dict[str, Any], mesh: Mesh, rules: dict):
+    """Sharding tree for a train/prefill batch dict."""
+    b = rules["batch"]
+    out = {}
+    for k, v in batch_abstract.items():
+        if k in ("tokens", "labels"):
+            out[k] = _named(mesh, P(b, None))
+        else:  # frames / image_embeds: (B, S, d)
+            out[k] = _named(mesh, P(b, None, None))
+    return out
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit_spec(mesh: Mesh, spec_axes, shape) -> P:
+    """Drop sharding on dims that do not divide the mesh axes (e.g. batch=1
+    long-context decode, 50 SSM heads on a 16-way axis)."""
+    out = []
+    for dim, axes in zip(shape, spec_axes):
+        out.append(axes if dim % _axis_size(mesh, axes) == 0 else None)
+    return P(*out)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, rules: dict):
+    """Sharding tree for a decode cache, by leaf name. Leaves under the
+    scanned 'blocks' subtree carry a leading layers dim (never sharded);
+    every dim is divisibility-checked against the mesh."""
+    cb, cs = rules["cache_batch"], rules["cache_seq"]
+
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        if name in ("k", "v"):          # (B, S, KV, hd)
+            axes = [cb, cs, rules.get("kv_heads"), None]
+        elif name in ("ck", "cv"):      # (B, Sm, H, hd) — cross memory
+            axes = [cb, None, rules.get("heads"), None]
+        elif name in ("c", "kr"):       # MLA compressed (B, S, dim)
+            axes = [cb, cs, None]
+        elif name == "state":           # SSM (B, H, P, N)
+            axes = [cb, rules.get("mlp"), None, None]
+        elif name and name.startswith("conv"):  # (B, W-1, D)
+            axes = [cb, None, None]
+        else:
+            axes = [None] * leaf.ndim
+        if leaf.ndim == len(axes) + 1:  # stacked (cycles, ...) under blocks
+            axes = [None] + axes
+        return _named(mesh, _fit_spec(mesh, axes, leaf.shape))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [one(p, l) for p, l in flat])
+
+
+def param_shardings(model: Model, mesh: Mesh, rules: dict):
+    specs = model.param_specs(rules)
+    return jax.tree_util.tree_map(lambda s: _named(mesh, s), specs)
+
+
+def opt_shardings(param_sh, mesh: Mesh):
+    return AdamState(count=_named(mesh, P()),
+                     mu=param_sh, nu=param_sh)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def build_train_step(model: Model, mesh: Optional[Mesh], rules: dict,
+                     acfg: AdamConfig = AdamConfig(),
+                     with_projection: bool = True):
+    cfg = model.cfg
+
+    def train_step(params, opt_state, batch):
+        with axis_rules(mesh, rules):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+            new_params, new_opt = adam_update(grads, opt_state, params, acfg)
+            if with_projection and cfg.projection_specs:
+                new_params = apply_constraints(new_params,
+                                               cfg.projection_specs,
+                                               step=new_opt.count)
+        return loss, metrics, new_params, new_opt
+
+    return train_step
+
+
+def build_prefill_step(model: Model, mesh: Optional[Mesh], rules: dict):
+    def prefill_step(params, batch):
+        with axis_rules(mesh, rules):
+            logits, _ = model.forward(params, batch)
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def build_decode_step(model: Model, mesh: Optional[Mesh], rules: dict):
+    def serve_step(params, cache, tokens, pos):
+        with axis_rules(mesh, rules):
+            logits, new_cache = model.decode(params, cache, tokens, pos)
+        return logits[:, -1, :], new_cache
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# lowering helper (dry-run + real launch share this)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredCell:
+    kind: str
+    lowered: Any
+    compiled: Any = None
+
+    def compile(self):
+        self.compiled = self.lowered.compile()
+        return self.compiled
+
+
+def lower_cell(model: Model, shape_name: str, mesh: Mesh, multi_pod: bool,
+               dtype=jnp.bfloat16, with_optimizer: bool = True,
+               with_projection: bool = True,
+               extra_rules: Optional[dict] = None) -> LoweredCell:
+    """jit(...).lower(...) for one (arch x shape x mesh) cell using abstract
+    inputs only — nothing is allocated."""
+    from ..models.zoo import input_specs
+
+    cfg = model.cfg
+    sh = SHAPES[shape_name]
+    rules = rules_for_cell(cfg, shape_name, multi_pod)
+    if extra_rules:
+        rules.update(extra_rules)
+
+    params_abs = model.abstract_params(dtype)
+    p_sh = param_shardings(model, mesh, rules)
+    specs = input_specs(cfg, shape_name, dtype)
+
+    if sh["kind"] == "train":
+        acfg = AdamConfig(moment_dtype=jnp.float32)
+        opt_abs = jax.eval_shape(functools.partial(adam_init, cfg=acfg),
+                                 params_abs)
+        o_sh = opt_shardings(p_sh, mesh)
+        b_sh = batch_shardings(specs, mesh, rules)
+        step = build_train_step(model, mesh, rules, acfg,
+                                with_projection=with_projection)
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(NamedSharding(mesh, P()),
+                           None, p_sh, o_sh),
+            donate_argnums=(0, 1),
+        )
+        with mesh:
+            lowered = jitted.lower(params_abs, opt_abs, specs)
+        return LoweredCell("train", lowered)
+
+    if sh["kind"] == "prefill":
+        b_sh = batch_shardings(specs, mesh, rules)
+        step = build_prefill_step(model, mesh, rules)
+        jitted = jax.jit(
+            step, in_shardings=(p_sh, b_sh),
+            out_shardings=NamedSharding(
+                mesh, logical_spec(("batch", "vocab"), rules)))
+        with mesh:
+            lowered = jitted.lower(params_abs, specs)
+        return LoweredCell("prefill", lowered)
+
+    # decode
+    cache_abs = specs["cache"]
+    c_sh = cache_shardings(cache_abs, mesh, rules)
+    tok_sh = NamedSharding(mesh, P(rules["batch"], None))
+    pos_sh = NamedSharding(mesh, P())
+    step = build_decode_step(model, mesh, rules)
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_sh, c_sh, tok_sh, pos_sh),
+        out_shardings=(NamedSharding(
+            mesh, logical_spec(("batch", "vocab"), rules)), c_sh),
+        donate_argnums=(1,),
+    )
+    with mesh:
+        lowered = jitted.lower(params_abs, cache_abs,
+                               specs["tokens"], specs["pos"])
+    return LoweredCell("decode", lowered)

@@ -1,0 +1,405 @@
+"""Attention family: GQA/MQA, sliding-window, cross-attention, MLA.
+
+Training/prefill uses a pure-JAX *chunked* (flash-style) attention — running
+max/denominator over KV chunks — so S x S logits are never materialized (a
+hard requirement at 32k prefill; the Pallas flash kernel in
+repro/kernels/flash_attention is the TPU drop-in for the same math).
+Irrelevant (fully masked) KV chunks are skipped with lax.cond.
+
+Decode attends one new token against a KV cache; with sequence-parallel
+rules the cache seq dim is sharded over `data` and GSPMD lowers the softmax
+reductions to the flash-decoding all-reduce pattern.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import PM
+from .layers import apply_rope
+from ..dist.sharding import shard
+
+_NEG = -1e30
+
+
+# ------------------------------ layouts -------------------------------------
+
+def attn_layout(d: int, n_heads: int, n_kv: int, head_dim: int,
+                qkv_bias: bool = False):
+    lay = {
+        "wq": PM((d, n_heads, head_dim), ("fsdp", "heads", None), init="scaled"),
+        "wk": PM((d, n_kv, head_dim), ("fsdp", "kv_heads", None), init="scaled"),
+        "wv": PM((d, n_kv, head_dim), ("fsdp", "kv_heads", None), init="scaled"),
+        "wo": PM((n_heads, head_dim, d), ("heads", None, "fsdp"), init="scaled"),
+    }
+    if qkv_bias:
+        lay["bq"] = PM((n_heads, head_dim), ("heads", None), init="zeros")
+        lay["bk"] = PM((n_kv, head_dim), ("kv_heads", None), init="zeros")
+        lay["bv"] = PM((n_kv, head_dim), ("kv_heads", None), init="zeros")
+    return lay
+
+
+def mla_layout(d: int, n_heads: int, q_lora: int, kv_lora: int,
+               nope: int, rope: int, v_dim: int):
+    return {
+        "wq_a": PM((d, q_lora), ("fsdp", None), init="scaled"),
+        "q_norm": PM((q_lora,), (None,), init="ones"),
+        "wq_b": PM((q_lora, n_heads, nope + rope), (None, "heads", None),
+                   init="scaled"),
+        "wkv_a": PM((d, kv_lora + rope), ("fsdp", None), init="scaled"),
+        "kv_norm": PM((kv_lora,), (None,), init="ones"),
+        "wk_b": PM((kv_lora, n_heads, nope), (None, "heads", None),
+                   init="scaled"),
+        "wv_b": PM((kv_lora, n_heads, v_dim), (None, "heads", None),
+                   init="scaled"),
+        "wo": PM((n_heads, v_dim, d), ("heads", None, "fsdp"), init="scaled"),
+    }
+
+
+# --------------------------- chunked attention ------------------------------
+
+def _chunk_body(qc, kc, vc, q_pos, kv_pos, carry, causal, window, scale):
+    """One (q_chunk x kv_chunk) tile of online-softmax attention.
+
+    qc: (B, cq, KV, R, hd); kc/vc: (B, ck, KV, hd);
+    carry = (acc (B,cq,KV,R,hd) f32, m (B,cq,KV,R) f32, l like m).
+
+    Explicit sharding pins: remat recompute + scan bodies can drop the
+    batch/kv-head sharding of captured chunk tensors (measured as ~16x
+    replicated tile traffic, EXPERIMENTS.md §Perf gemma iteration 2).
+    """
+    acc, m, l = carry
+    qc = shard(qc, "batch", "attn_seq", "kv_heads", None, None)
+    kc = shard(kc, "batch", None, "kv_heads", None)
+    vc = shard(vc, "batch", None, "kv_heads", None)
+    logits = jnp.einsum("bqkrh,bskh->bqkrs", qc.astype(jnp.float32),
+                        kc.astype(jnp.float32)) * scale  # (B,cq,KV,R,ck)
+    mask = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+    mask_b = mask[None, :, None, None, :]
+    logits = jnp.where(mask_b, logits, _NEG)
+    m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[..., None])
+    p = jnp.where(mask_b, p, 0.0)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bqkrs,bskh->bqkrh", p, vc.astype(jnp.float32))
+    return acc_new, m_new, l_new
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True, window: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      q_offset: int = 0,
+                      sliced_window: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, KV, R, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, KV, R, hd).
+
+    Online-softmax over KV chunks; fully-masked tiles are skipped via
+    lax.cond (halves causal FLOPs at runtime). Each q-chunk row is wrapped
+    in jax.checkpoint so the backward pass RECOMPUTES tile probabilities
+    (flash-attention semantics) instead of storing every
+    (q_chunk x kv_chunk) tile — without this, training at 4k+ context
+    stores O(S^2) probabilities and blows HBM.
+    """
+    B, Sq, KV, R, hd = q.shape
+    Skv = k.shape[1]
+    v_hd = v.shape[-1]          # may differ from hd (MLA)
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    if Sq % q_chunk:
+        q_chunk = Sq            # non-divisible (rare): single chunk
+    if Skv % kv_chunk:
+        kv_chunk = Skv          # e.g. 1600 image tokens vs 512 chunks
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0, (Sq, q_chunk, Skv, kv_chunk)
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = hd ** -0.5
+
+    q_r = q.reshape(B, nq, q_chunk, KV, R, hd)
+
+    # sliced-window fast path: each q chunk attends at most the trailing
+    # (window + q_chunk) keys — slice just that range so the lowered HLO is
+    # O(S*window), not O(S^2)-masked (gemma3/mixtral/hymba local layers).
+    use_slice = (sliced_window and window and causal
+                 and 0 < window + q_chunk < Skv)
+    if use_slice:
+        W2 = min(Skv, -(-(window + q_chunk) // kv_chunk) * kv_chunk)
+        nk_eff = W2 // kv_chunk
+    else:
+        k_r = k.reshape(B, nk, kv_chunk, KV, hd)
+        v_r = v.reshape(B, nk, kv_chunk, KV, v_hd)
+        nk_eff = nk
+
+    def per_q_chunk(iq, qc):
+        q_pos = q_offset + iq * q_chunk + jnp.arange(q_chunk)
+        if use_slice:
+            q_end = iq * q_chunk + q_chunk
+            start = jnp.clip(q_end - W2, 0, Skv - W2)
+            ks = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (B, W2, KV, hd))
+            vs = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (B, W2, KV, v_hd))
+            ks_r = ks.reshape(B, nk_eff, kv_chunk, KV, hd)
+            vs_r = vs.reshape(B, nk_eff, kv_chunk, KV, v_hd)
+        else:
+            start = 0
+            ks_r, vs_r = k_r, v_r
+
+        def kv_step(carry, ik):
+            kc = ks_r[:, ik]
+            vc = vs_r[:, ik]
+            kv_pos = start + ik * kv_chunk + jnp.arange(kv_chunk)
+            relevant = jnp.asarray(True)
+            if causal:
+                relevant &= kv_pos[0] <= q_pos[-1]
+            if window:
+                relevant &= (q_pos[0] - kv_pos[-1]) < window
+
+            def compute(c):
+                return _chunk_body(qc, kc, vc, q_pos, kv_pos, c,
+                                   causal, window, scale)
+
+            carry = jax.lax.cond(relevant, compute, lambda c: c, carry)
+            return carry, None
+
+        acc0 = shard(jnp.zeros((B, q_chunk, KV, R, v_hd), jnp.float32),
+                     "batch", "attn_seq", "kv_heads", None, None)
+        m0 = jnp.full((B, q_chunk, KV, R), _NEG, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KV, R), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+                                      jnp.arange(nk_eff))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    per_q_chunk = jax.checkpoint(per_q_chunk,
+                                 static_argnums=())  # flash-style recompute
+    outs = jax.lax.map(lambda i: per_q_chunk(i, q_r[:, i]), jnp.arange(nq))
+    # outs: (nq, B, cq, KV, R, v_hd) -> (B, Sq, KV, R, v_hd)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, KV, R, v_hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray,
+                     window: int = 0) -> jnp.ndarray:
+    """One-token attention against a cache.
+
+    q: (B, 1, KV, R, hd); caches: (B, Smax, KV, hd); pos: scalar current
+    position (tokens at indices <= pos are valid).
+    """
+    B, _, KVh, R, hd = q.shape
+    Smax = k_cache.shape[1]
+    scale = hd ** -0.5
+    logits = jnp.einsum("bqkrh,bskh->bqkrs", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    kv_pos = jnp.arange(Smax)
+    valid = kv_pos <= pos
+    if window:
+        valid &= kv_pos > pos - window
+    logits = jnp.where(valid[None, None, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bqkrs,bskh->bqkrh", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ------------------------------ GQA module ----------------------------------
+
+def _project_qkv(params, x, n_heads, n_kv, head_dim, positions, rope_theta,
+                 rope_frac):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if rope_theta:
+        q = apply_rope(q, positions, rope_theta, rope_frac)
+        k = apply_rope(k, positions, rope_theta, rope_frac)
+    return q, k, v
+
+
+def attn_apply(params, x, *, n_heads: int, n_kv: int, head_dim: int,
+               positions, causal: bool = True, window: int = 0,
+               rope_theta: float = 10000.0, rope_frac: float = 1.0,
+               q_chunk: int = 512, kv_chunk: int = 512,
+               sliced_window: bool = False) -> jnp.ndarray:
+    """Full-sequence (train / prefill) GQA. x: (B, S, d).
+
+    Sequence parallelism: when the mesh rules define "attn_seq" (archs whose
+    head counts don't divide the model axis), the attention interior is
+    sharded over the query-sequence dim — otherwise every model-axis rank
+    would redundantly compute the full attention."""
+    B, S, d = x.shape
+    R = n_heads // n_kv
+    x = shard(x, "batch", "attn_seq", "embed")
+    q, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions,
+                           rope_theta, rope_frac)
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    qg = q.reshape(B, S, n_kv, R, head_dim)
+    out = chunked_attention(qg, k, v, causal=causal, window=window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            sliced_window=sliced_window)
+    out = out.reshape(B, S, n_heads, head_dim)
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shard(y, "batch", "seq", "embed")
+
+
+def attn_prefill_cache(params, x, *, n_heads, n_kv, head_dim, positions,
+                       rope_theta=10000.0, rope_frac=1.0):
+    """K/V for cache initialization from a prefilled sequence."""
+    _, k, v = _project_qkv(params, x, n_heads, n_kv, head_dim, positions,
+                           rope_theta, rope_frac)
+    return k, v
+
+
+def attn_decode(params, x, cache: Tuple[jnp.ndarray, jnp.ndarray],
+                pos, *, n_heads: int, n_kv: int, head_dim: int,
+                window: int = 0, rope_theta: float = 10000.0,
+                rope_frac: float = 1.0):
+    """One-token decode. x: (B, 1, d); cache: (k, v) each (B, Smax, KV, hd);
+    pos: scalar int32 index of the new token. Returns (y, new_cache)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv, head_dim,
+                                   positions, rope_theta, rope_frac)
+    k_cache, v_cache = cache
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    k_cache = shard(k_cache, "cache_batch", "cache_seq", "kv_heads", None)
+    v_cache = shard(v_cache, "cache_batch", "cache_seq", "kv_heads", None)
+    R = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, R, head_dim)
+    out = decode_attention(qg, k_cache, v_cache, pos, window=window)
+    out = out.reshape(B, 1, n_heads, head_dim)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, (k_cache, v_cache)
+
+
+# ---------------------------- cross attention -------------------------------
+
+def cross_attn_layout(d: int, n_heads: int, head_dim: int, d_mem: int):
+    return {
+        "wq": PM((d, n_heads, head_dim), ("fsdp", "heads", None), init="scaled"),
+        "wk": PM((d_mem, n_heads, head_dim), ("fsdp", "heads", None), init="scaled"),
+        "wv": PM((d_mem, n_heads, head_dim), ("fsdp", "heads", None), init="scaled"),
+        "wo": PM((n_heads, head_dim, d), ("heads", None, "fsdp"), init="scaled"),
+    }
+
+
+def cross_attn_apply(params, x, memory, *, n_heads: int, head_dim: int,
+                     q_chunk: int = 512, kv_chunk: int = 512):
+    """x: (B, S, d) queries; memory: (B, Sm, d_mem) keys/values (no RoPE)."""
+    B, S, _ = x.shape
+    x = shard(x, "batch", "attn_seq", "embed")
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, params["wv"])
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    qg = q.reshape(B, S, n_heads, 1, head_dim)
+    out = chunked_attention(qg, k, v, causal=False, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    out = out.reshape(B, S, n_heads, head_dim)
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return shard(y, "batch", "seq", "embed")
+
+
+# -------------------------------- MLA ---------------------------------------
+
+def _mla_qkv(params, x, n_heads, nope, rope_dim, positions, rope_theta):
+    from .layers import rmsnorm_apply
+    cq = rmsnorm_apply({"scale": params["q_norm"]}, x @ params["wq_a"])
+    q = jnp.einsum("bsl,lhk->bshk", cq, params["wq_b"])
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, rope_theta)
+
+    ckr = x @ params["wkv_a"]
+    kv_lora = params["wkv_a"].shape[1] - rope_dim
+    c, k_rope_raw = ckr[..., :kv_lora], ckr[..., kv_lora:]
+    c = rmsnorm_apply({"scale": params["kv_norm"]}, c)
+    k_rope = apply_rope(k_rope_raw, positions, rope_theta)  # (B,S,rope)
+    return q_nope, q_rope, c, k_rope
+
+
+def mla_apply(params, x, *, n_heads: int, nope: int, rope_dim: int,
+              v_dim: int, positions, rope_theta: float = 10000.0,
+              q_chunk: int = 512, kv_chunk: int = 512) -> jnp.ndarray:
+    """Multi-head Latent Attention, full-sequence form (train / prefill)."""
+    B, S, _ = x.shape
+    q_nope, q_rope, c, k_rope = _mla_qkv(params, x, n_heads, nope, rope_dim,
+                                         positions, rope_theta)
+    k_nope = jnp.einsum("bsl,lhk->bshk", c, params["wk_b"])
+    v = jnp.einsum("bsl,lhk->bshk", c, params["wv_b"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, n_heads, rope_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    qg = q_full.reshape(B, S, n_heads, 1, nope + rope_dim)
+    # note: v_dim may differ from qk dim; chunked_attention only needs
+    # matching k/q dims — pad v path via separate einsum shape
+    out = chunked_attention(qg, k_full, v, causal=True, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    out = out.reshape(B, S, n_heads, v_dim)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def mla_decode(params, x, cache, pos, *, n_heads: int, nope: int,
+               rope_dim: int, v_dim: int, rope_theta: float = 10000.0,
+               absorb: bool = False):
+    """MLA decode with the *compressed* cache (c, k_rope) — (B, Smax,
+    kv_lora) + (B, Smax, rope). `absorb=True` uses the matrix-absorbed form
+    (q projected into latent space; no per-step K/V materialization)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, k_rope_new = _mla_qkv(
+        params, x, n_heads, nope, rope_dim, positions, rope_theta)
+    c_cache, kr_cache = cache
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        c_cache, c_new.astype(c_cache.dtype), pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        kr_cache, k_rope_new.astype(kr_cache.dtype), pos, axis=1)
+    c_cache = shard(c_cache, "cache_batch", "cache_seq", None)
+    kr_cache = shard(kr_cache, "cache_batch", "cache_seq", None)
+    Smax = c_cache.shape[1]
+    scale = (nope + rope_dim) ** -0.5
+    valid = jnp.arange(Smax) <= pos
+
+    if absorb:
+        # q_nope (B,1,H,nope) @ wk_b^T -> latent space (B,1,H,kv_lora)
+        q_lat = jnp.einsum("bqhk,lhk->bqhl", q_nope.astype(jnp.float32),
+                           params["wk_b"].astype(jnp.float32))
+        logits = (jnp.einsum("bqhl,bsl->bqhs", q_lat,
+                             c_cache.astype(jnp.float32))
+                  + jnp.einsum("bqhk,bsk->bqhs", q_rope.astype(jnp.float32),
+                               kr_cache.astype(jnp.float32))) * scale
+        logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bqhs,bsl->bqhl", p, c_cache.astype(jnp.float32))
+        out = jnp.einsum("bqhl,lhk->bqhk", o_lat,
+                         params["wv_b"].astype(jnp.float32)).astype(x.dtype)
+    else:
+        k_nope = jnp.einsum("bsl,lhk->bshk", c_cache, params["wk_b"])
+        v = jnp.einsum("bsl,lhk->bshk", c_cache, params["wv_b"])
+        k_rope_h = jnp.broadcast_to(
+            kr_cache[:, :, None, :], kr_cache.shape[:2] + (n_heads, rope_dim))
+        k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        logits = jnp.einsum("bqhk,bshk->bqhs", q_full.astype(jnp.float32),
+                            k_full.astype(jnp.float32)) * scale
+        logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bqhs,bshk->bqhk", p,
+                         v.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bqhk,hkd->bqd", out, params["wo"])
+    return y, (c_cache, kr_cache)

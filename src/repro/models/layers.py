@@ -1,0 +1,143 @@
+"""Shared neural layers for the LM zoo (pure functional JAX).
+
+Every layer is a (layout, apply) pair: ``*_layout`` returns a PM pytree
+(shapes + logical sharding axes), ``*_apply`` consumes the materialized
+params. Norm/softmax arithmetic is f32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .param import PM
+from ..dist.sharding import shard
+
+
+# ----------------------------- norms ---------------------------------------
+
+def rmsnorm_layout(d: int):
+    return {"scale": PM((d,), (None,), init="ones")}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm_layout(d: int):
+    return {"scale": PM((d,), (None,), init="ones"),
+            "bias": PM((d,), (None,), init="zeros")}
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)
+           * params["scale"].astype(jnp.float32)
+           + params["bias"].astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def norm_layout(d: int, kind: str = "rmsnorm"):
+    return layernorm_layout(d) if kind == "layernorm" else rmsnorm_layout(d)
+
+
+def norm_apply(params, x, kind: str = "rmsnorm", eps: float = 1e-6):
+    if kind == "layernorm":
+        return layernorm_apply(params, x, eps)
+    return rmsnorm_apply(params, x, eps)
+
+
+# ----------------------------- RoPE -----------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, rope_frac: float = 1.0):
+    """Frequency table for (the first rope_frac of) a head dim."""
+    rot = int(head_dim * rope_frac) // 2 * 2
+    inv = 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float32) / rot))
+    return jnp.asarray(inv), rot
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+               rope_frac: float = 1.0) -> jnp.ndarray:
+    """x: (..., S, heads..., head_dim); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    inv, rot = rope_freqs(hd, theta, rope_frac)
+    if rot == 0:
+        return x
+    ang = positions.astype(jnp.float32)[..., None] * inv   # (..., S, rot/2)
+    # broadcast over any head dims between S and head_dim
+    for _ in range(x.ndim - ang.ndim):
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([r1, r2], axis=-1).reshape(xr.shape)
+    out = jnp.concatenate([rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+    return out
+
+
+def sinusoidal_positions(S: int, d: int, offset=0) -> jnp.ndarray:
+    pos = np.arange(S)[:, None] + 0
+    dim = np.arange(0, d, 2)[None, :]
+    ang = pos / np.power(10000.0, dim / d)
+    out = np.zeros((S, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ----------------------------- MLP ------------------------------------------
+
+def mlp_layout(d: int, ff: int, kind: str = "swiglu"):
+    if kind in ("swiglu", "geglu"):
+        return {"w1": PM((d, ff), ("fsdp", "mlp"), init="scaled"),
+                "w3": PM((d, ff), ("fsdp", "mlp"), init="scaled"),
+                "w2": PM((ff, d), ("mlp", "fsdp"), init="scaled")}
+    return {"w1": PM((d, ff), ("fsdp", "mlp"), init="scaled"),
+            "w2": PM((ff, d), ("mlp", "fsdp"), init="scaled")}
+
+
+def mlp_apply(params, x, kind: str = "swiglu"):
+    if kind in ("swiglu", "geglu"):
+        gate = x @ params["w1"]
+        up = x @ params["w3"]
+        act = jax.nn.silu(gate) if kind == "swiglu" else jax.nn.gelu(gate)
+        h = act * up
+    else:
+        h = jax.nn.gelu(x @ params["w1"])
+    h = shard(h, "batch", "seq", "mlp")
+    return h @ params["w2"]
+
+
+# ----------------------------- embeddings -----------------------------------
+
+def embed_layout(vocab: int, d: int):
+    return {"table": PM((vocab, d), ("vocab", "embed"), init="normal")}
+
+
+def embed_apply(params, tokens: jnp.ndarray, scale: Optional[float] = None):
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale:
+        out = out * jnp.asarray(scale, out.dtype)
+    return shard(out, "batch", "seq", "embed")
+
+
+def unembed_apply(params, x: jnp.ndarray,
+                  true_vocab: Optional[int] = None) -> jnp.ndarray:
+    """Logits in the activation dtype (f32 accumulation); padded vocab
+    columns (>= true_vocab) are masked to -inf so CE and sampling are exact."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    vp = params["table"].shape[0]
+    if true_vocab is not None and true_vocab < vp:
+        pad = jax.lax.broadcasted_iota(jnp.int32, (vp,), 0) >= true_vocab
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return shard(logits, "batch", "seq", "vocab")

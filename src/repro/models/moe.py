@@ -1,0 +1,116 @@
+"""Mixture-of-Experts layer: top-k router + sort-based dispatch/combine.
+
+Dispatch is the capacity-bounded sort approach (MaxText-style): token-expert
+assignments are sorted by expert id, bucketed into an (E, capacity, d)
+buffer, processed with a single batched einsum over the (possibly
+expert-sharded) stacked expert weights, and scatter-added back with the gate
+weights. Overflowing tokens are dropped (capacity factor controls the rate).
+
+Expert sharding: "ep" shards the leading expert dim over the `model` mesh
+axis (deepseek, 160 experts); "tp" shards each expert's d_ff instead
+(mixtral, 8 experts < mesh axis).
+
+Aux outputs: switch-style load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import PM
+from .layers import mlp_layout, mlp_apply
+from ..dist.sharding import shard
+
+
+def moe_layout(d: int, d_ff: int, n_experts: int, n_shared: int = 0,
+               shared_ff: int = 0, expert_sharding: str = "ep",
+               mlp_kind: str = "swiglu"):
+    e_ax = "experts" if expert_sharding == "ep" else None
+    ff_ax = None if expert_sharding == "ep" else "mlp"
+    lay = {
+        "router": PM((d, n_experts), (None, None), init="scaled",
+                     dtype=jnp.float32),
+        "w1": PM((n_experts, d, d_ff), (e_ax, "fsdp", ff_ax), init="scaled"),
+        "w3": PM((n_experts, d, d_ff), (e_ax, "fsdp", ff_ax), init="scaled"),
+        "w2": PM((n_experts, d_ff, d), (e_ax, ff_ax, "fsdp"), init="scaled"),
+    }
+    if n_shared:
+        lay["shared"] = mlp_layout(d, shared_ff or d_ff * n_shared, mlp_kind)
+    return lay
+
+
+def _capacity(T: int, top_k: int, n_experts: int, factor: float) -> int:
+    cap = int(math.ceil(T * top_k * factor / n_experts))
+    return max(8, -(-cap // 8) * 8)  # round up to a multiple of 8
+
+
+def moe_apply(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, mlp_kind: str = "swiglu",
+              router_norm: bool = True, expert_sharding: str = "ep"
+              ) -> Tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (y, aux). Gate weights renormalized over the top-k."""
+    B, S, d = x.shape
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])        # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, top_k)                     # (T, k)
+    if router_norm:
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ------------------------------------------
+    cap = _capacity(T, top_k, n_experts, capacity_factor)
+    flat_e = idx.reshape(-1)                                    # (T*k,)
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    tok = order // top_k
+    grp_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts),
+                                 side="left")
+    pos = jnp.arange(T * top_k) - grp_start[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, n_experts * cap)
+
+    # constraint axes per mode: EP shards the expert dim, TP shards d_ff
+    e_ax = "experts" if expert_sharding == "ep" else None
+    f_ax = None if expert_sharding == "ep" else "mlp"
+
+    buf = jnp.zeros((n_experts * cap + 1, d), x.dtype)
+    buf = buf.at[dest].set(xf[tok])
+    buf = buf[:-1].reshape(n_experts, cap, d)
+    buf = shard(buf, e_ax, "expert_cap", "embed")
+
+    # ---- expert FFN (batched over E) -----------------------------------
+    h1 = jnp.einsum("ecd,edf->ecf", buf, params["w1"])
+    h3 = jnp.einsum("ecd,edf->ecf", buf, params["w3"])
+    act = jax.nn.silu(h1) if mlp_kind == "swiglu" else jax.nn.gelu(h1)
+    hidden = shard(act * h3, e_ax, "expert_cap", f_ax)
+    out_buf = jnp.einsum("ecf,efd->ecd", hidden, params["w2"])
+    out_buf = shard(out_buf, e_ax, "expert_cap", "embed")
+
+    # ---- combine --------------------------------------------------------
+    flat_out = out_buf.reshape(n_experts * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         flat_out[jnp.minimum(dest, n_experts * cap - 1)],
+                         0.0)
+    weights = gate.reshape(-1)[order][:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[tok].add(gathered * weights)
+    y = y.reshape(B, S, d)
+    y = shard(y, "batch", "seq", "embed")
+
+    # ---- shared experts (always-on dense path, deepseek) ----------------
+    if "shared" in params:
+        y = y + mlp_apply(params["shared"], x, mlp_kind)
+
+    # ---- aux losses ------------------------------------------------------
+    me = jnp.mean(probs, axis=0)                                 # (E,)
+    one_hot = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)  # (T,k,E)
+    ce = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)              # frac routed
+    lb_loss = n_experts * jnp.sum(me * ce) / top_k
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return y, aux

@@ -1,0 +1,96 @@
+"""Parameter layout system: a single source of truth for parameter shapes,
+dtypes, initializers, and *logical* sharding axes.
+
+``param_layout(cfg)`` (per arch, in transformer.py/zoo.py) builds a pytree of
+``PM`` leaves. From it we derive:
+  * ``materialize(key, layout)``   — real initialized params (smoke tests,
+                                      real training),
+  * ``abstract(layout)``           — ShapeDtypeStructs (dry-run: the 236B
+                                      configs are never allocated),
+  * ``partition_specs(layout, rules)`` — PartitionSpec pytree from logical
+                                      axis names via the mesh rules
+                                      (dist/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class PM(NamedTuple):
+    """Parameter metadata: shape, logical axes (one name or None per dim),
+    initializer, dtype."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | scaled
+    dtype: Any = None              # None -> layout default
+    scale: float = 0.02
+
+    def __repr__(self):
+        return f"PM{self.shape}@{self.axes}"
+
+
+def is_pm(x) -> bool:
+    return isinstance(x, PM)
+
+
+def _tree_map_pm(fn, layout):
+    return jax.tree_util.tree_map(fn, layout,
+                                  is_leaf=lambda x: isinstance(x, PM))
+
+
+def abstract(layout, default_dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — zero allocation (dry-run path)."""
+    return _tree_map_pm(
+        lambda pm: jax.ShapeDtypeStruct(pm.shape, pm.dtype or default_dtype),
+        layout)
+
+
+def materialize(key: jax.Array, layout, default_dtype=jnp.float32):
+    """Initialize real parameters. Keys are split deterministically by a
+    pre-order walk so layouts are reproducible."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        layout, is_leaf=lambda x: isinstance(x, PM))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for pm, k in zip(leaves, keys):
+        dt = pm.dtype or default_dtype
+        if pm.init == "zeros":
+            arr = jnp.zeros(pm.shape, dt)
+        elif pm.init == "ones":
+            arr = jnp.ones(pm.shape, dt)
+        elif pm.init == "scaled":  # fan-in scaled normal
+            fan_in = pm.shape[0] if pm.shape else 1
+            arr = (jax.random.normal(k, pm.shape, jnp.float32)
+                   * np.sqrt(1.0 / max(fan_in, 1))).astype(dt)
+        else:  # "normal"
+            arr = (jax.random.normal(k, pm.shape, jnp.float32)
+                   * pm.scale).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def partition_specs(layout, rules: dict):
+    """Logical axes -> PartitionSpec via `rules` (name -> mesh axis or None).
+    Unknown names map to None (replicated)."""
+    def one(pm: PM):
+        return P(*[rules.get(a) if a is not None else None for a in pm.axes])
+    return _tree_map_pm(one, layout)
+
+
+def stack_layout(layout, n: int, axis_name: Optional[str] = None):
+    """Prepend a leading `layers` dim of size n to every PM (scan stacking)."""
+    def one(pm: PM):
+        return PM((n,) + pm.shape, (axis_name,) + pm.axes, pm.init,
+                  pm.dtype, pm.scale)
+    return _tree_map_pm(one, layout)
+
+
+def count_params(layout) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        layout, is_leaf=lambda x: isinstance(x, PM))
+    return int(sum(int(np.prod(pm.shape)) for pm in leaves))

@@ -1,0 +1,498 @@
+"""Transformer stacks for the zoo: pattern-based block composition.
+
+An architecture is a *pattern* — a short cycle of block kinds repeated over
+the depth (scan-over-layers keeps compiles tractable at 512-way GSPMD):
+
+  global    causal full attention + MLP/MoE
+  local     causal sliding-window attention + MLP/MoE
+  cross     cross-attention to provided memory + MLP      (llama-vision)
+  mla       multi-head latent attention + MoE             (deepseek-v2)
+  ssm       Mamba2 SSD block (no MLP when d_ff == 0)      (mamba2)
+  hybrid    parallel local-attention + SSD heads + MLP    (hymba)
+  enc       bidirectional attention + MLP                 (whisper encoder)
+  dec_cross causal self-attn + cross-attn + MLP           (whisper decoder)
+
+Entry points: ``forward`` (train/prefill logits), ``train_loss``,
+``init_cache`` / ``decode_step`` (serving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .param import PM, stack_layout
+from . import layers as L
+from . import attention as A
+from . import ssm as SSMOD
+from . import moe as MOE
+from ..dist.sharding import shard
+
+# ---------------------------------------------------------------------------
+# config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | hybrid | vlm | audio | ssm | moe
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[str, ...] = ("global",)
+    window: int = 0                 # sliding window for "local"/"hybrid"
+    mlp_kind: str = "swiglu"        # swiglu | geglu | gelu
+    norm_kind: str = "rmsnorm"
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_frac: float = 1.0
+    embed_scale: bool = False       # gemma: embeddings * sqrt(d)
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    expert_sharding: str = "ep"     # ep | tp
+    # MLA
+    q_lora: int = 0
+    kv_lora: int = 0
+    qk_nope: int = 0
+    qk_rope: int = 0
+    v_head_dim: int = 0
+    # SSM
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_chunk: int = 64
+    # enc-dec / cross
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500             # whisper encoder length for decode cells
+    n_img_tokens: int = 0           # vlm stub memory length
+    # runtime
+    norm_eps: float = 1e-6
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    remat: bool = True
+    # perf levers (§Perf; default off = paper-faithful/naive baseline)
+    sliced_window: bool = False     # O(S*window) lowering for local attn
+    mla_absorb: bool = False        # matrix-absorbed MLA decode
+    ssd_bf16: bool = False          # bf16 SSD tile intermediates
+    moe_impl: str = "gspmd"         # gspmd | shardmap (manual EP)
+    remat_policy: str = "full"      # full (save nothing) | dots
+    # sharding nuances: logical-rule overrides for dims that do not divide
+    # the mesh (e.g. 25 heads, vocab 32001) — ("heads", None) replicates.
+    rules_overrides: Tuple = ()
+    # paper integration: structured-sparsity constraint specs
+    projection_specs: Tuple = ()
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded up to a multiple of 128 so the vocab dim always
+        shards over the 16-way model axis (pad logits are masked to -inf)."""
+        return -(-self.vocab // 128) * 128
+
+    # None -> derive from the pattern; explicit override for mixed patterns
+    # (gemma3: 5 local : 1 global still qualifies for long-context serving)
+    long_context_capable: Optional[bool] = None
+
+    def sub_quadratic(self) -> bool:
+        if self.long_context_capable is not None:
+            return self.long_context_capable
+        kinds = set(self.pattern)
+        return kinds <= {"local", "ssm", "hybrid"} or "ssm" in kinds
+
+
+# ---------------------------------------------------------------------------
+# block layout / apply
+# ---------------------------------------------------------------------------
+
+def _mlp_part_layout(cfg: ArchConfig):
+    if cfg.d_ff <= 0:
+        return {}
+    lay = {"mlp_norm": L.norm_layout(cfg.d_model, cfg.norm_kind)}
+    if cfg.n_experts:
+        lay["moe"] = MOE.moe_layout(
+            cfg.d_model, cfg.d_ff, cfg.n_experts,
+            n_shared=cfg.n_shared_experts,
+            shared_ff=cfg.d_ff * max(cfg.n_shared_experts, 1),
+            expert_sharding=cfg.expert_sharding, mlp_kind=cfg.mlp_kind)
+    else:
+        lay["mlp"] = L.mlp_layout(cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return lay
+
+
+def block_layout(cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    lay: Dict[str, Any] = {}
+    if kind in ("global", "local", "enc", "dec_cross"):
+        lay["attn_norm"] = L.norm_layout(d, cfg.norm_kind)
+        lay["attn"] = A.attn_layout(d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, cfg.qkv_bias)
+    if kind in ("cross", "dec_cross"):
+        lay["cross_norm"] = L.norm_layout(d, cfg.norm_kind)
+        lay["cross"] = A.cross_attn_layout(d, cfg.n_heads, cfg.head_dim, d)
+    if kind == "mla":
+        lay["attn_norm"] = L.norm_layout(d, cfg.norm_kind)
+        lay["mla"] = A.mla_layout(d, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+                                  cfg.qk_nope, cfg.qk_rope, cfg.v_head_dim)
+    if kind in ("ssm", "hybrid"):
+        lay["ssm_norm"] = L.norm_layout(d, cfg.norm_kind)
+        lay["ssm"] = SSMOD.ssm_layout(d, cfg.d_inner, cfg.ssm_state,
+                                      cfg.ssm_headdim)
+    if kind == "hybrid":
+        lay["attn_norm"] = L.norm_layout(d, cfg.norm_kind)
+        lay["attn"] = A.attn_layout(d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, cfg.qkv_bias)
+    lay.update(_mlp_part_layout(cfg))
+    return lay
+
+
+def _mlp_part_apply(params, x, cfg: ArchConfig, aux_acc):
+    if cfg.d_ff <= 0:
+        return x, aux_acc
+    h = L.norm_apply(params["mlp_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    if cfg.n_experts:
+        if cfg.moe_impl == "shardmap" and cfg.expert_sharding == "ep":
+            from .moe_shardmap import moe_apply_shardmap
+            y, aux = moe_apply_shardmap(
+                params["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_kind)
+        else:
+            y, aux = MOE.moe_apply(
+                params["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, mlp_kind=cfg.mlp_kind,
+                expert_sharding=cfg.expert_sharding)
+        aux_acc = {k: aux_acc.get(k, 0.0) + v for k, v in aux.items()}
+    else:
+        y = L.mlp_apply(params["mlp"], h, cfg.mlp_kind)
+    return x + y, aux_acc
+
+
+def block_apply_full(params, x, kind: str, cfg: ArchConfig, positions,
+                     memory=None, aux_acc=None):
+    """Full-sequence block application (train / prefill)."""
+    aux_acc = aux_acc if aux_acc is not None else {}
+    common = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                  head_dim=cfg.head_dim, positions=positions,
+                  rope_theta=cfg.rope_theta, rope_frac=cfg.rope_frac,
+                  q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                  sliced_window=cfg.sliced_window)
+    if kind in ("global", "local", "enc", "dec_cross"):
+        h = L.norm_apply(params["attn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y = A.attn_apply(params["attn"], h, causal=(kind != "enc"),
+                         window=cfg.window if kind == "local" else 0, **common)
+        x = x + y
+    if kind in ("cross", "dec_cross"):
+        h = L.norm_apply(params["cross_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y = A.cross_attn_apply(params["cross"], h, memory,
+                               n_heads=cfg.n_heads, head_dim=cfg.head_dim,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+        x = x + y
+    if kind == "mla":
+        h = L.norm_apply(params["attn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y = A.mla_apply(params["mla"], h, n_heads=cfg.n_heads,
+                        nope=cfg.qk_nope, rope_dim=cfg.qk_rope,
+                        v_dim=cfg.v_head_dim, positions=positions,
+                        rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk,
+                        kv_chunk=cfg.kv_chunk)
+        x = x + y
+    if kind == "ssm":
+        h = L.norm_apply(params["ssm_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        x = x + SSMOD.ssd_apply(params["ssm"], h, headdim=cfg.ssm_headdim,
+                                chunk=cfg.ssm_chunk, tile_bf16=cfg.ssd_bf16)
+    if kind == "hybrid":
+        h = L.norm_apply(params["ssm_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y_ssm = SSMOD.ssd_apply(params["ssm"], h, headdim=cfg.ssm_headdim,
+                                chunk=cfg.ssm_chunk, tile_bf16=cfg.ssd_bf16)
+        ha = L.norm_apply(params["attn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y_attn = A.attn_apply(params["attn"], ha, causal=True,
+                              window=cfg.window, **common)
+        x = x + 0.5 * (y_ssm + y_attn)
+    return _mlp_part_apply(params, x, cfg, aux_acc)
+
+
+# ---------------------------------------------------------------------------
+# full-model layout
+# ---------------------------------------------------------------------------
+
+def _split_pattern(cfg: ArchConfig):
+    p = len(cfg.pattern)
+    return cfg.n_layers // p, cfg.n_layers % p
+
+
+def _remat(cfg: ArchConfig, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def model_layout(cfg: ArchConfig):
+    cycles, rem = _split_pattern(cfg)
+    lay: Dict[str, Any] = {
+        "embed": L.embed_layout(cfg.vocab_padded, cfg.d_model)}
+    if cycles:
+        lay["blocks"] = {
+            f"p{i}_{kind}": stack_layout(block_layout(cfg, kind), cycles,
+                                         "layers")
+            for i, kind in enumerate(cfg.pattern)}
+    for r in range(rem):
+        lay[f"rem{r}_{cfg.pattern[r]}"] = block_layout(cfg, cfg.pattern[r])
+    lay["final_norm"] = L.norm_layout(cfg.d_model, cfg.norm_kind)
+    if not cfg.tie_embeddings:
+        lay["unembed"] = L.embed_layout(cfg.vocab_padded, cfg.d_model)
+    if cfg.encdec:
+        lay["enc_blocks"] = stack_layout(block_layout(cfg, "enc"),
+                                         cfg.n_enc_layers, "layers")
+        lay["enc_norm"] = L.norm_layout(cfg.d_model, cfg.norm_kind)
+    return lay
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _encode(params, frames, cfg: ArchConfig):
+    """Whisper-style encoder over precomputed frame embeddings (stub)."""
+    S = frames.shape[1]
+    x = frames + L.sinusoidal_positions(S, cfg.d_model).astype(frames.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.broadcast_to(jnp.arange(S), frames.shape[:2])
+
+    def body(x, blk):
+        x, _ = block_apply_full(blk, x, "enc", cfg, positions)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"])
+    return L.norm_apply(params["enc_norm"], x, cfg.norm_kind, cfg.norm_eps)
+
+
+def forward(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """Logits for a full sequence. batch keys: tokens (B,S) [, frames,
+    image_embeds]. Returns (logits (B,S,V) f32, aux dict)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed_apply(params["embed"], tokens,
+                      scale=np.sqrt(cfg.d_model) if cfg.embed_scale else None)
+    if not cfg.rope_theta:  # absolute sinusoidal (whisper decoder)
+        x = x + L.sinusoidal_positions(S, cfg.d_model).astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    memory = None
+    if cfg.encdec:
+        memory = _encode(params, batch["frames"], cfg)
+    elif cfg.n_img_tokens:
+        memory = batch["image_embeds"]
+
+    cycles, rem = _split_pattern(cfg)
+    aux0 = {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "dropped_frac": jnp.zeros((), jnp.float32)} if cfg.n_experts else {}
+
+    if cycles:
+        def cycle_body(carry, cyc_params):
+            x, aux = carry
+            for i, kind in enumerate(cfg.pattern):
+                x, aux = block_apply_full(cyc_params[f"p{i}_{kind}"], x, kind,
+                                          cfg, positions, memory=memory,
+                                          aux_acc=aux)
+            return (x, aux), None
+
+        (x, aux0), _ = jax.lax.scan(_remat(cfg, cycle_body), (x, aux0),
+                                    params["blocks"])
+    for r in range(rem):
+        kind = cfg.pattern[r]
+        x, aux0 = block_apply_full(params[f"rem{r}_{kind}"], x, kind, cfg,
+                                   positions, memory=memory, aux_acc=aux0)
+
+    x = L.norm_apply(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_apply(table, x, true_vocab=cfg.vocab)
+    return logits, aux0
+
+
+def train_loss(params, batch, cfg: ArchConfig):
+    """Mean next-token CE (+ MoE aux). labels: (B, S) int32, -1 = ignore.
+
+    CE is computed streaming (logsumexp - gather) in f32 without
+    materializing a full log-softmax copy of the logits."""
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    # label logit via one-hot reduce: a gather along the (model-sharded)
+    # vocab dim would force an all-gather of the full logits — the one-hot
+    # product reduces shard-locally and all-reduces only (B, S).
+    vp = logits.shape[-1]
+    onehot = jax.nn.one_hot(jnp.maximum(labels, 0), vp, dtype=logits.dtype)
+    take = jnp.sum(logits * onehot, axis=-1).astype(jnp.float32)
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - take) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        metrics.update(aux)
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def _block_cache_shape(cfg: ArchConfig, kind: str, B: int, Smax: int,
+                       dtype) -> Dict[str, Any]:
+    hd = cfg.head_dim
+    if kind in ("global", "local", "dec_cross"):
+        c = {"k": jnp.zeros((B, Smax, cfg.n_kv_heads, hd), dtype),
+             "v": jnp.zeros((B, Smax, cfg.n_kv_heads, hd), dtype)}
+        if kind == "dec_cross":
+            c["ck"] = jnp.zeros((B, cfg.enc_seq, cfg.n_heads, hd), dtype)
+            c["cv"] = jnp.zeros((B, cfg.enc_seq, cfg.n_heads, hd), dtype)
+        return c
+    if kind == "cross":
+        m = cfg.n_img_tokens
+        return {"ck": jnp.zeros((B, m, cfg.n_heads, hd), dtype),
+                "cv": jnp.zeros((B, m, cfg.n_heads, hd), dtype)}
+    if kind == "mla":
+        return {"c": jnp.zeros((B, Smax, cfg.kv_lora), dtype),
+                "kr": jnp.zeros((B, Smax, cfg.qk_rope), dtype)}
+    if kind == "ssm":
+        return SSMOD.ssm_init_cache(B, cfg.d_inner, cfg.ssm_state,
+                                    cfg.ssm_headdim, dtype)
+    if kind == "hybrid":
+        c = SSMOD.ssm_init_cache(B, cfg.d_inner, cfg.ssm_state,
+                                 cfg.ssm_headdim, dtype)
+        c["k"] = jnp.zeros((B, Smax, cfg.n_kv_heads, hd), dtype)
+        c["v"] = jnp.zeros((B, Smax, cfg.n_kv_heads, hd), dtype)
+        return c
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ArchConfig, B: int, Smax: int, dtype=jnp.bfloat16):
+    """Zeroed decode cache pytree (stacked per pattern position)."""
+    cycles, rem = _split_pattern(cfg)
+
+    def stacked(kind):
+        one = _block_cache_shape(cfg, kind, B, Smax, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.zeros((cycles,) + a.shape, a.dtype), one)
+
+    cache: Dict[str, Any] = {}
+    if cycles:
+        cache["blocks"] = {f"p{i}_{kind}": stacked(kind)
+                           for i, kind in enumerate(cfg.pattern)}
+    for r in range(rem):
+        cache[f"rem{r}_{cfg.pattern[r]}"] = _block_cache_shape(
+            cfg, cfg.pattern[r], B, Smax, dtype)
+    return cache
+
+
+def _block_decode(params, x, kind: str, cfg: ArchConfig, cache, pos):
+    aux: Dict[str, Any] = {}
+    if kind in ("global", "local", "dec_cross", "hybrid"):
+        h = L.norm_apply(params["attn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y, (k, v) = A.attn_decode(
+            params["attn"], h, (cache["k"], cache["v"]), pos,
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            window=cfg.window if kind in ("local", "hybrid") else 0,
+            rope_theta=cfg.rope_theta, rope_frac=cfg.rope_frac)
+        cache = {**cache, "k": k, "v": v}
+        if kind == "hybrid":
+            hs = L.norm_apply(params["ssm_norm"], x, cfg.norm_kind,
+                              cfg.norm_eps)
+            ssm_cache = {k2: cache[k2] for k2 in
+                         ("state", "conv_x", "conv_B", "conv_C")}
+            y2, new_ssm = SSMOD.ssd_decode(params["ssm"], hs, ssm_cache,
+                                           headdim=cfg.ssm_headdim)
+            cache = {**cache, **new_ssm}
+            x = x + 0.5 * (y + y2)
+        else:
+            x = x + y
+    if kind in ("cross", "dec_cross"):
+        h = L.norm_apply(params["cross_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, params["cross"]["wq"])
+        B = x.shape[0]
+        qg = q.reshape(B, 1, cfg.n_heads, 1, cfg.head_dim)
+        out = A.decode_attention(qg, cache["ck"], cache["cv"],
+                                 jnp.asarray(cache["ck"].shape[1] - 1))
+        out = out.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, params["cross"]["wo"])
+    if kind == "mla":
+        h = L.norm_apply(params["attn_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y, (c, kr) = A.mla_decode(params["mla"], h, (cache["c"], cache["kr"]),
+                                  pos, n_heads=cfg.n_heads, nope=cfg.qk_nope,
+                                  rope_dim=cfg.qk_rope, v_dim=cfg.v_head_dim,
+                                  rope_theta=cfg.rope_theta,
+                                  absorb=cfg.mla_absorb)
+        cache = {**cache, "c": c, "kr": kr}
+        x = x + y
+    if kind == "ssm":
+        h = L.norm_apply(params["ssm_norm"], x, cfg.norm_kind, cfg.norm_eps)
+        y, new_ssm = SSMOD.ssd_decode(params["ssm"], h, cache,
+                                      headdim=cfg.ssm_headdim)
+        cache = {**cache, **new_ssm} if isinstance(cache, dict) else new_ssm
+        x = x + y
+    x, _ = _mlp_part_apply(params, x, cfg, aux)
+    return x, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    """One serving step: tokens (B, 1) int32 at position `pos` (scalar).
+    Returns (logits (B, 1, V) f32, new_cache)."""
+    x = L.embed_apply(params["embed"], tokens,
+                      scale=np.sqrt(cfg.d_model) if cfg.embed_scale else None)
+    if not cfg.rope_theta:
+        table = L.sinusoidal_positions(cache_max_len(cache, cfg), cfg.d_model)
+        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0
+                                             ).astype(x.dtype)[None]
+    cycles, rem = _split_pattern(cfg)
+    new_cache: Dict[str, Any] = {}
+    if cycles:
+        def body(x, xs):
+            blk, blk_cache = xs
+            outs = []
+            for i, kind in enumerate(cfg.pattern):
+                key = f"p{i}_{kind}"
+                x, c = _block_decode(blk[key], x, kind, cfg, blk_cache[key],
+                                     pos)
+                outs.append((key, c))
+            return x, dict(outs)
+
+        x, nc = jax.lax.scan(body, x, (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = nc
+    for r in range(rem):
+        kind = cfg.pattern[r]
+        key = f"rem{r}_{kind}"
+        x, c = _block_decode(params[key], x, kind, cfg, cache[key], pos)
+        new_cache[key] = c
+    x = L.norm_apply(params["final_norm"], x, cfg.norm_kind, cfg.norm_eps)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = L.unembed_apply(table, x, true_vocab=cfg.vocab)
+    return logits, new_cache
+
+
+def cache_max_len(cache, cfg: ArchConfig) -> int:
+    """Max sequence capacity of the self-attention caches (for absolute
+    position tables). Looks at the stacked 'k' leaves: (cycles, B, Smax, ...)."""
+    blocks = cache.get("blocks", cache)
+    flat = jax.tree_util.tree_flatten_with_path(blocks)[0]
+    dims = [leaf.shape[-3] for path, leaf in flat
+            if any(getattr(p, "key", None) == "k" for p in path)]
+    return max(dims) if dims else cfg.enc_seq

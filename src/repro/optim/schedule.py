@@ -1,0 +1,26 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn
+
+
+def step_decay(lr: float, decay: float, every: int):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        return jnp.asarray(lr, jnp.float32) * decay ** jnp.floor(step / every)
+    return fn

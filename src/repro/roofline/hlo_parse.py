@@ -1,0 +1,317 @@
+"""Trip-count-aware cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — a scan over 60
+layers under-reports flops/bytes/collectives by 60x. This parser rebuilds
+the costs from the HLO itself:
+
+  * each computation is parsed with a local symbol table (operand shapes are
+    resolved from defining lines — modern HLO prints operands by name only);
+  * the call graph (while body/condition, fusion calls, conditional
+    branches, reduce lambdas) propagates an execution multiplier: a while
+    body's costs are multiplied by the trip count parsed from its condition
+    (max integer constant — exact for lax.scan/fori_loop, an upper bound
+    for early-exit while_loops like the projection Newton solver);
+  * conditional branches are counted as always-taken (upper bound — the
+    causal-attention tile skip means real traffic is lower);
+  * HBM bytes are a per-op proxy: operands+result for compute ops, result
+    only for slicing/gather/broadcast, 2x update for dynamic-update-slice,
+    zero for plumbing (parameter/tuple/gte/bitcast/reshape/while/
+    conditional) whose traffic is accounted at use sites;
+  * dot flops = 2 * prod(result dims) * prod(lhs contracting dims);
+  * collective bytes use ring-transfer factors over the replica-group size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=")
+_OP_RE = re.compile(r"=\s*(?:\([^=]*?\)|[a-z0-9_]+\[[0-9,]*\][^ ]*)\s*"
+                    r"([a-z][a-z0-9\-]*)\(")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^{]*)?\{\s*$")
+_REF_RE = re.compile(
+    r"(body|condition|calls|to_apply|true_computation|false_computation)="
+    r"%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"\bconstant\((\d+)\)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"(?<![=\w])%([\w.\-]+)")
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "reshape", "while", "conditional", "after-all", "optimization-barrier",
+    "copy-done", "all-gather-done", "all-reduce-done", "partition-id",
+    "replica-id",
+}
+_RESULT_ONLY_OPS = {"dynamic-slice", "gather", "slice",
+                    "pad", "concatenate", "reverse"}
+# ops whose operand/result traffic is counted; anything else (standalone
+# elementwise) is treated as fused into a neighboring anchor op — the
+# CPU-backend HLO we analyze fuses far less than a TPU compile would, so
+# counting every elementwise op would inflate the memory term ~20x.
+_BYTE_ANCHOR_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "fusion", "sort",
+    "scatter", "select-and-scatter", "cholesky", "triangular-solve",
+    "rng", "rng-bit-generator", "map",
+} | _RESULT_ONLY_OPS | {"dynamic-update-slice", "transpose", "copy"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _dims(s: str) -> List[int]:
+    return [int(d) for d in s.split(",")] if s else []
+
+
+def _nbytes(dt: str, dims: List[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[dt]
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    tile_bytes: float = 0.0     # attention/SSD tile traffic a fused kernel
+    #                             (flash / SSD Pallas) keeps in VMEM
+    collective_moved: Dict[str, float] = dataclasses.field(default_factory=dict)
+    collective_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    refs: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_const: int = 1
+
+
+@dataclasses.dataclass
+class HloCost:
+    dot_flops: float
+    bytes_proxy: float
+    tile_bytes: float
+    collective_moved: Dict[str, float]
+    collective_counts: Dict[str, float]
+    trips: Dict[str, int]
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_moved.values())
+
+    @property
+    def bytes_fused(self) -> float:
+        """HBM proxy assuming tile-expansion intermediates (S x S attention
+        probabilities, SSD Q x Q decay tiles) stay in VMEM — the traffic the
+        production Pallas kernels (kernels/flash_attention, kernels/l1inf)
+        actually generate."""
+        return max(self.bytes_proxy - self.tile_bytes, 0.0)
+
+
+def _parse_computation(lines: List[str]) -> CompCost:
+    comp = CompCost()
+    # pass A: symbol table name -> list[(dtype, dims)] (result shapes)
+    sym: Dict[str, List[Tuple[str, List[int]]]] = {}
+    parsed = []
+    for line in lines:
+        d = _DEF_RE.match(line)
+        m = _OP_RE.search(line)
+        op = m.group(1) if m else None
+        op_at = m.start(1) if m else len(line)
+        res_shapes = [(mm.group(1), _dims(mm.group(2)))
+                      for mm in _SHAPE_RE.finditer(line)
+                      if mm.start() < op_at]
+        if d:
+            sym[d.group(1)] = res_shapes
+        parsed.append((line, op, op_at, res_shapes))
+        for c in _CONST_RE.finditer(line):
+            comp.max_const = max(comp.max_const, int(c.group(1)))
+        for r in _REF_RE.finditer(line):
+            kind = r.group(1)
+            if kind == "calls":
+                kind = "fusion_calls" if op == "fusion" else "calls"
+            comp.refs.append((kind, r.group(2)))
+        bm = _BRANCHES_RE.search(line)
+        if bm:
+            for name in bm.group(1).split(","):
+                comp.refs.append(("branch", name.strip().lstrip("%")))
+
+    # pass B: costs with operand shapes resolved
+    for line, op, op_at, res_shapes in parsed:
+        if op is None:
+            continue
+        tail = line[op_at:]
+        # cut attribute tail containing computation refs (to_apply=%x etc.)
+        operand_names = [n for n in _OPERAND_RE.findall(tail)]
+        opd_shapes: List[Tuple[str, List[int]]] = []
+        for n in operand_names:
+            opd_shapes.extend(sym.get(n, []))
+
+        res_b = sum(_nbytes(dt, dims) for dt, dims in res_shapes)
+        opd_b = sum(_nbytes(dt, dims) for dt, dims in opd_shapes)
+
+        # ---- flops ------------------------------------------------------
+        if op == "dot" and res_shapes and opd_shapes:
+            cm = _CONTRACT_RE.search(line)
+            contract = _dims(cm.group(1)) if cm else []
+            lhs = opd_shapes[0][1]
+            k = 1
+            for ci in contract:
+                if ci < len(lhs):
+                    k *= lhs[ci]
+            out_n = 1
+            for d2 in res_shapes[0][1]:
+                out_n *= d2
+            comp.flops += 2.0 * out_n * k
+
+        # ---- collectives --------------------------------------------------
+        base_op = op[:-len("-start")] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            n = 1
+            g = _GROUPS_RE.search(line)
+            if g:
+                n = len(g.group(1).split(","))
+            else:
+                gi = _GROUPS_IOTA_RE.search(line)
+                if gi:
+                    n = int(gi.group(2))
+            n = max(n, 2)
+            ring = (n - 1) / n
+            ob = opd_b or res_b
+            if base_op == "all-reduce":
+                moved = 2.0 * ring * ob
+            elif base_op == "all-gather":
+                moved = ring * res_b
+            elif base_op == "reduce-scatter":
+                moved = ring * ob
+            elif base_op == "all-to-all":
+                moved = ring * res_b
+            else:  # collective-permute
+                moved = float(res_b)
+            comp.collective_moved[base_op] = (
+                comp.collective_moved.get(base_op, 0.0) + moved)
+            comp.collective_counts[base_op] = (
+                comp.collective_counts.get(base_op, 0) + 1)
+
+        # ---- bytes proxy ---------------------------------------------------
+        if op in _ZERO_BYTE_OPS or op.endswith("-start"):
+            continue
+        if base_op in _COLLECTIVES:
+            comp.bytes += res_b + opd_b
+            continue
+        if op not in _BYTE_ANCHOR_OPS:
+            continue  # standalone elementwise: assumed fused on TPU
+        if op == "dynamic-update-slice":
+            upd = opd_shapes[1] if len(opd_shapes) > 1 else None
+            comp.bytes += 2.0 * _nbytes(*upd) if upd else float(res_b)
+            continue
+        if op in _RESULT_ONLY_OPS:
+            comp.bytes += 2.0 * res_b
+            continue
+        if op in ("transpose", "copy"):
+            contrib = 2.0 * res_b
+        else:
+            contrib = float(res_b + opd_b)
+        comp.bytes += contrib
+        # tile-traffic classification — what a fused Pallas kernel keeps in
+        # VMEM: (a) any op touching a rank>=5 tensor (attention tiles
+        # (B,cq,KV,R,ck), online-softmax accumulators, SSD (B,nc,Q,Q,H)
+        # decay tiles) is flash-interior; (b) a rank>=4 tensor dwarfing
+        # everything else on its line (tile expansion/consumption dots).
+        tensors = ([(dt, dims) for dt, dims in res_shapes]
+                   + [(dt, dims) for dt, dims in opd_shapes])
+        if tensors:
+            sizes = [(_nbytes(dt, dims), len(dims)) for dt, dims in tensors]
+            max_rank = max(r for _, r in sizes)
+            big_b, big_rank = max(sizes)
+            rest = sum(b for b, _ in sizes) - big_b
+            if max_rank >= 5:
+                comp.tile_bytes += contrib
+            elif big_rank >= 4 and big_b > 4 * max(rest, 1):
+                comp.tile_bytes += (2.0 * big_b
+                                    if op in ("transpose", "copy")
+                                    else float(big_b))
+    return comp
+
+
+def parse_hlo(text: str) -> HloCost:
+    comps: Dict[str, CompCost] = {}
+    entry: Optional[str] = None
+    cur_name: Optional[str] = None
+    cur_lines: List[str] = []
+    blocks: List[Tuple[str, List[str]]] = []
+    for line in text.splitlines():
+        stripped = line.strip()
+        if cur_name is None:
+            h = _HEADER_RE.match(stripped)
+            if h and ("->" in stripped or h.group(1)):
+                cur_name = h.group(2)
+                cur_lines = []
+                if h.group(1):
+                    entry = cur_name
+            continue
+        if stripped == "}":
+            blocks.append((cur_name, cur_lines))
+            cur_name = None
+            continue
+        cur_lines.append(line)
+    for name, lines in blocks:
+        comps[name] = _parse_computation(lines)
+
+    # propagate execution multipliers from ENTRY through the call graph;
+    # while body/condition refs come from the same line, so pair in order
+    mult: Dict[str, float] = {}
+    fused: Dict[str, bool] = {}
+    trips: Dict[str, int] = {}
+
+    def visit(name: str, m: float, via_fusion: bool, depth: int = 0):
+        if name not in comps or depth > 64:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        fused[name] = fused.get(name, True) and via_fusion
+        comp = comps[name]
+        bodies = [r for k2, r in comp.refs if k2 == "body"]
+        condis = [r for k2, r in comp.refs if k2 == "condition"]
+        for b, c in zip(bodies, condis):
+            trip = comps[c].max_const if c in comps else 1
+            trips[b] = max(trips.get(b, 1), trip)
+            visit(b, m * trip, False, depth + 1)
+            visit(c, m * trip, False, depth + 1)
+        for kind, ref in comp.refs:
+            if kind in ("body", "condition"):
+                continue
+            if kind == "fusion_calls":
+                visit(ref, m, True, depth + 1)
+            else:
+                visit(ref, m, via_fusion, depth + 1)
+
+    if entry is None:
+        entry = blocks[0][0] if blocks else None
+    if entry is not None:
+        visit(entry, 1.0, False)
+
+    flops = 0.0
+    byts = 0.0
+    tile = 0.0
+    coll_moved: Dict[str, float] = {}
+    coll_counts: Dict[str, float] = {}
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m <= 0:
+            continue
+        flops += m * comp.flops
+        if not fused.get(name, False):
+            byts += m * comp.bytes
+            tile += m * comp.tile_bytes
+        for k, v in comp.collective_moved.items():
+            coll_moved[k] = coll_moved.get(k, 0.0) + m * v
+        for k, v in comp.collective_counts.items():
+            coll_counts[k] = coll_counts.get(k, 0.0) + m * v
+    return HloCost(dot_flops=flops, bytes_proxy=byts, tile_bytes=tile,
+                   collective_moved=coll_moved, collective_counts=coll_counts,
+                   trips=trips)

@@ -1,0 +1,3 @@
+from .model import SAEConfig, sae_init, sae_apply, sae_loss, accuracy
+from .data import make_classification, make_lung_surrogate, train_test_split
+from .train import SAETrainConfig, train_sae, SAEResult

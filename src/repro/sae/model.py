@@ -1,0 +1,73 @@
+"""Supervised autoencoder (paper §5, Fig. 4).
+
+Symmetric fully-connected net: encoder d -> h -(ReLU)-> k (latent = #classes),
+decoder k -> h -(ReLU)-> d. Loss phi = lambda * Huber(X, Xhat) + CE(Y, Z).
+
+The l1,inf constraint is applied to the first encoder weight W1 (d, h):
+zeroing a *row group*... in our storage x @ W1, input feature i is row i of
+W1, so the prunable "column" of the paper is our row => max-axis = 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SAEConfig", "sae_init", "sae_apply", "sae_loss", "accuracy"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SAEConfig:
+    n_features: int
+    n_hidden: int = 96
+    n_classes: int = 2
+    lam: float = 1.0          # reconstruction weight (paper's lambda)
+    huber_delta: float = 1.0
+
+
+def _linear_init(key, d_in, d_out, dtype=jnp.float32):
+    scale = jnp.sqrt(2.0 / d_in)
+    wkey, bkey = jax.random.split(key)
+    return {
+        "w": (jax.random.normal(wkey, (d_in, d_out)) * scale).astype(dtype),
+        "b": jnp.zeros((d_out,), dtype),
+    }
+
+
+def sae_init(key: jax.Array, cfg: SAEConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "enc1": _linear_init(k1, cfg.n_features, cfg.n_hidden),
+        "enc2": _linear_init(k2, cfg.n_hidden, cfg.n_classes),
+        "dec1": _linear_init(k3, cfg.n_classes, cfg.n_hidden),
+        "dec2": _linear_init(k4, cfg.n_hidden, cfg.n_features),
+    }
+
+
+def sae_apply(params, x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (latent logits Z, reconstruction Xhat)."""
+    h = jax.nn.relu(x @ params["enc1"]["w"] + params["enc1"]["b"])
+    z = h @ params["enc2"]["w"] + params["enc2"]["b"]
+    hd = jax.nn.relu(z @ params["dec1"]["w"] + params["dec1"]["b"])
+    xhat = hd @ params["dec2"]["w"] + params["dec2"]["b"]
+    return z, xhat
+
+
+def huber(err: jnp.ndarray, delta: float = 1.0) -> jnp.ndarray:
+    a = jnp.abs(err)
+    return jnp.where(a <= delta, 0.5 * a * a, delta * (a - 0.5 * delta))
+
+
+def sae_loss(params, x, y, cfg: SAEConfig):
+    z, xhat = sae_apply(params, x)
+    recon = jnp.mean(huber(xhat - x, cfg.huber_delta))
+    logp = jax.nn.log_softmax(z, axis=-1)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    return cfg.lam * recon + ce, {"recon": recon, "ce": ce}
+
+
+def accuracy(params, x, y) -> jnp.ndarray:
+    z, _ = sae_apply(params, x)
+    return jnp.mean((jnp.argmax(z, axis=-1) == y).astype(jnp.float32))

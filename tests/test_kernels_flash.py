@@ -1,0 +1,69 @@
+"""Flash attention Pallas kernel vs jnp oracle (interpret mode) and vs the
+models' chunked attention — shape/dtype/mask sweeps."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention, ref
+from repro.models.attention import chunked_attention
+
+
+def _mk(B, Sq, Skv, H, KV, hd, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Sq, H, hd)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, Skv, KV, hd)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, Skv, KV, hd)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 64)])
+@pytest.mark.parametrize("H,KV", [(4, 4), (8, 2)])
+def test_flash_vs_ref(causal, window, H, KV):
+    B, Sq, Skv, hd = 2, 256, 256, 32
+    q, k, v = _mk(B, Sq, Skv, H, KV, hd, jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=128, block_kv=128, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Skv, hd)
+    expect = ref.attention_ref(qf, kf, vf, groups=H // KV, causal=causal,
+                               window=window)
+    expect = expect.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 3e-5),
+                                       (jnp.bfloat16, 3e-2)])
+def test_flash_dtypes(dtype, tol):
+    B, S, H, KV, hd = 1, 128, 2, 2, 64
+    q, k, v = _mk(B, S, S, H, KV, hd, dtype, seed=3)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    expect = ref.attention_ref(qf, kf, vf, groups=1, causal=True)
+    expect = expect.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_matches_model_chunked_attention():
+    """The kernel and the models' jnp chunked attention implement the same
+    math (kernel = TPU drop-in for the dry-run execution path)."""
+    B, S, KV, R, hd = 2, 256, 2, 3, 32
+    H = KV * R
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(B, S, KV, R, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    out_chunked = chunked_attention(q, k, v, causal=True, window=32,
+                                    q_chunk=64, kv_chunk=64)
+    q2 = q.reshape(B, S, H, hd)
+    out_flash = flash_attention(q2, k, v, causal=True, window=32,
+                                block_q=64, block_kv=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out_flash),
+                               np.asarray(out_chunked.reshape(B, S, H, hd)),
+                               atol=3e-5, rtol=3e-5)

@@ -1,0 +1,99 @@
+"""Pallas l1,inf kernels vs the pure-jnp oracle (interpret mode, CPU).
+
+Shape/dtype sweeps per kernel + full-projection equivalence against both the
+ref oracle and the faithful heap algorithm.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.l1inf import ref
+from repro.kernels.l1inf.kernel import colstats, mu_solve, clip_apply
+from repro.kernels.l1inf.ops import project_l1inf_pallas
+from repro.core import project_l1inf_heap, project_l1inf_newton
+
+
+@pytest.mark.parametrize("shape", [(8, 128), (512, 128), (1024, 256), (64, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_colstats(shape, dtype):
+    rng = np.random.default_rng(0)
+    Y = jnp.asarray(rng.normal(size=shape), dtype)
+    bn = shape[0] if shape[0] <= 512 else 512
+    s, mx = colstats(Y, block_m=128, block_n=bn, interpret=True)
+    s_ref, mx_ref = ref.colstats_ref(Y)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+    np.testing.assert_allclose(np.asarray(mx), np.asarray(mx_ref), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(16, 128), (256, 128), (777, 128), (96, 256)])
+@pytest.mark.parametrize("theta_frac", [0.01, 0.3, 0.9])
+def test_mu_solve(shape, theta_frac):
+    rng = np.random.default_rng(1)
+    Y = jnp.asarray(rng.uniform(0, 1, size=shape), jnp.float32)
+    colsum = jnp.sum(Y, axis=0)
+    theta = jnp.asarray(theta_frac * float(jnp.median(colsum)), jnp.float32)
+    mu, k, S, act = mu_solve(Y, theta, block_m=128, interpret=True)
+    mu_r, k_r, S_r, act_r = ref.mu_solve_ref(Y, theta)
+    np.testing.assert_array_equal(np.asarray(act), np.asarray(act_r))
+    np.testing.assert_allclose(np.asarray(mu), np.asarray(mu_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(k), np.asarray(k_r))
+    np.testing.assert_allclose(np.asarray(S), np.asarray(S_r), rtol=1e-5, atol=1e-5)
+    # defining property: removed mass == theta on active columns
+    removed = np.sum(np.maximum(np.asarray(Y) - np.asarray(mu)[None, :], 0), axis=0)
+    np.testing.assert_allclose(removed[np.asarray(act)], float(theta), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_clip_apply(dtype):
+    rng = np.random.default_rng(2)
+    Y = jnp.asarray(rng.normal(size=(256, 128)), dtype)
+    mu = jnp.asarray(np.abs(rng.normal(size=128)), jnp.float32)
+    X = clip_apply(Y, mu, block_m=128, block_n=256, interpret=True)
+    X_ref = ref.clip_apply_ref(Y, mu)
+    np.testing.assert_allclose(np.asarray(X, np.float32), np.asarray(X_ref, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(7, 5), (100, 100), (33, 257), (1000, 64), (2, 1000)])
+@pytest.mark.parametrize("Cfrac", [0.02, 0.25, 0.8, 1.3])
+def test_full_projection_vs_heap(shape, Cfrac):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    Y = rng.normal(size=shape)
+    norm = np.abs(Y).max(axis=0).sum()
+    C = float(Cfrac * norm)
+    X = np.asarray(project_l1inf_pallas(jnp.asarray(Y, jnp.float32), C, interpret=True))
+    Xh = project_l1inf_heap(Y, C)
+    scale = max(np.abs(Y).max(), 1.0)
+    np.testing.assert_allclose(X, Xh, atol=3e-4 * scale, rtol=3e-3)
+    assert np.abs(X).max(axis=0).sum() <= C * (1 + 1e-3) + 1e-6
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_full_projection_dtypes(dtype):
+    rng = np.random.default_rng(5)
+    Y = jnp.asarray(rng.normal(size=(96, 200)), dtype)
+    C = 10.0
+    X = project_l1inf_pallas(Y, C, interpret=True)
+    assert X.dtype == dtype
+    Xn = project_l1inf_newton(jnp.asarray(Y, jnp.float32), C)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(X, np.float32), np.asarray(Xn),
+                               atol=tol, rtol=tol)
+
+
+def test_inside_ball_identity():
+    rng = np.random.default_rng(6)
+    Y = jnp.asarray(rng.normal(size=(32, 48)) * 0.01, jnp.float32)
+    C = 1e6
+    X = project_l1inf_pallas(Y, C, interpret=True)
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(Y))
+
+
+def test_ref_oracle_matches_heap():
+    rng = np.random.default_rng(7)
+    Y = rng.uniform(-1, 1, size=(60, 80))
+    for Cfrac in (0.05, 0.5):
+        C = float(Cfrac * np.abs(Y).max(axis=0).sum())
+        Xr = np.asarray(ref.project_l1inf_ref(jnp.asarray(Y, jnp.float32), C))
+        Xh = project_l1inf_heap(Y, C)
+        np.testing.assert_allclose(Xr, Xh, atol=1e-4, rtol=1e-3)

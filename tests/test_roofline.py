@@ -1,0 +1,102 @@
+"""Roofline HLO parser: trip-count-aware flops/bytes/collective extraction
+validated against analytically-known programs."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.roofline.hlo_parse import parse_hlo
+from repro.roofline.analysis import parse_collectives, model_flops_for
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 64), jnp.float32)
+    hc = parse_hlo(_hlo(lambda x, y: x @ y, a, b))
+    expect = 2 * 128 * 256 * 64
+    assert abs(hc.dot_flops - expect) / expect < 0.01, hc.dot_flops
+
+
+def test_scan_multiplies_trip_count():
+    """A matmul inside lax.scan must count TRIPS times (the cost_analysis
+    undercount this parser exists to fix)."""
+    TRIPS = 13
+    w = jnp.zeros((TRIPS, 64, 64), jnp.float32)
+    x = jnp.zeros((8, 64), jnp.float32)
+
+    def fn(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    hc = parse_hlo(_hlo(fn, x, w))
+    expect = TRIPS * 2 * 8 * 64 * 64
+    assert hc.dot_flops >= expect * 0.99, (hc.dot_flops, expect, hc.trips)
+    assert hc.dot_flops <= expect * 1.5, (hc.dot_flops, expect)
+    assert any(t == TRIPS for t in hc.trips.values()), hc.trips
+
+
+def test_nested_scan_multiplies():
+    T1, T2 = 5, 7
+    x = jnp.zeros((4, 32), jnp.float32)
+    w = jnp.zeros((32, 32), jnp.float32)
+
+    def fn(x, w):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=T2)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=T1)
+        return out
+
+    hc = parse_hlo(_hlo(fn, x, w))
+    expect = T1 * T2 * 2 * 4 * 32 * 32
+    assert hc.dot_flops >= expect * 0.99, (hc.dot_flops, expect, hc.trips)
+    # XLA may hoist/unroll a bit, allow 2x
+    assert hc.dot_flops <= expect * 2.0
+
+
+def test_bytes_proxy_anchored_on_dots():
+    """Byte accounting is anchored on dots/fusions/reduces: a matmul counts
+    its operand+result traffic (standalone elementwise is assumed fused)."""
+    a = jnp.zeros((512, 512), jnp.float32)
+    hc = parse_hlo(_hlo(lambda x: (x @ x).sum(), a))
+    n = 512 * 512 * 4
+    # dot reads 2 operands + writes result (+ reduce reads it back)
+    assert 3 * n <= hc.bytes_proxy <= 10 * n, hc.bytes_proxy
+
+
+def test_collective_parse_synthetic():
+    txt = """
+HloModule test
+
+ENTRY %main (p: f32[1024]) -> f32[1024] {
+  %p = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = f32[4096]{0} all-gather(f32[1024]{0} %ar), replica_groups=[4,4]<=[16], dimensions={0}
+  ROOT %out = f32[1024]{0} add(f32[1024]{0} %ar, f32[1024]{0} %ar)
+}
+"""
+    stats = parse_collectives(txt)
+    assert stats.counts["all-reduce"] == 1
+    assert stats.counts["all-gather"] == 1
+    # all-reduce: 2*(3/4)*4096 bytes
+    assert abs(stats.bytes_by_kind["all-reduce"] - 2 * 0.75 * 4096) < 1
+    hc = parse_hlo(txt)
+    assert hc.collective_counts["all-reduce"] == 1
+    assert abs(hc.collective_moved["all-reduce"] - 2 * 0.75 * 4096) < 1
+
+
+def test_model_flops_for():
+    from repro.configs import get_config
+    cfg = get_config("gemma_7b")
+    f = model_flops_for(cfg, "train_4k", 8_500_000_000)
+    assert abs(f - 6 * 8.5e9 * 4096 * 256) / f < 1e-6
+    f_dec = model_flops_for(cfg, "decode_32k", 8_500_000_000)
+    assert abs(f_dec - 2 * 8.5e9 * 128) / f_dec < 1e-6

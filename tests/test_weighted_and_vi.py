@@ -1,0 +1,139 @@
+"""Weighted l1,inf projection + variational-inequality optimality
+certificates for the whole projection family.
+
+The VI certificate: X* = P_B(Y) iff <Y - X*, Z - X*> <= 0 for every
+feasible Z. We sample many random feasible Z per instance — a projection
+bug (wrong theta, wrong support, wrong clipping) shows up as a positive
+inner product.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (project_l1inf_weighted, l1inf_weighted_norm,
+                        project_l1inf_newton, project_l1inf_masked,
+                        project_l1_ball, project_l12_ball, l1inf_norm)
+
+
+def _random_feasible_l1inf_w(rng, n, m, w, C, count):
+    """Random points with sum_j w_j max_i |Z_ij| <= C."""
+    out = []
+    for _ in range(count):
+        Z = rng.normal(size=(n, m))
+        nrm = float((w * np.abs(Z).max(axis=0)).sum())
+        Z *= rng.uniform(0, 1) * C / max(nrm, 1e-12)
+        out.append(Z)
+    return out
+
+
+def _vi_holds(Y, X, feasible, tol=1e-4):
+    Y = np.asarray(Y, np.float64)
+    X = np.asarray(X, np.float64)
+    scale = max(np.abs(Y).max(), 1.0) ** 2
+    return all(np.sum((Y - X) * (Z - X)) <= tol * scale * Y.size ** 0.5
+               for Z in feasible)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("Cfrac", [0.05, 0.4, 0.9])
+def test_weighted_l1inf_vi_certificate(seed, Cfrac):
+    rng = np.random.default_rng(seed)
+    n, m = 12, 9
+    Y = rng.normal(size=(n, m))
+    w = rng.uniform(0.2, 3.0, size=m)
+    C = float(Cfrac * (w * np.abs(Y).max(axis=0)).sum())
+    X = np.asarray(project_l1inf_weighted(jnp.asarray(Y, jnp.float32),
+                                          jnp.asarray(w, jnp.float32), C))
+    # feasibility (tight when projecting from outside)
+    assert float((w * np.abs(X).max(axis=0)).sum()) <= C * (1 + 1e-4)
+    feas = _random_feasible_l1inf_w(rng, n, m, w, C, 50) + [X, np.zeros_like(X)]
+    assert _vi_holds(Y, X, feas)
+
+
+def test_weighted_equals_unweighted_at_w1():
+    rng = np.random.default_rng(3)
+    Y = rng.normal(size=(20, 15)).astype(np.float32)
+    C = 4.0
+    Xw = np.asarray(project_l1inf_weighted(jnp.asarray(Y),
+                                           jnp.ones(15, np.float32), C))
+    Xu = np.asarray(project_l1inf_newton(jnp.asarray(Y), C))
+    np.testing.assert_allclose(Xw, Xu, atol=1e-5)
+
+
+def test_weighted_prunes_heavy_columns_first():
+    """Columns with larger weights are more expensive to keep."""
+    rng = np.random.default_rng(4)
+    Y = np.abs(rng.normal(size=(10, 6))).astype(np.float32) + 0.5
+    w = np.array([1, 1, 1, 20, 20, 20], np.float32)
+    C = 0.25 * float((w * np.abs(Y).max(axis=0)).sum())
+    X = np.asarray(project_l1inf_weighted(jnp.asarray(Y), jnp.asarray(w), C))
+    live = np.abs(X).max(axis=0) > 1e-7
+    assert live[:3].sum() >= live[3:].sum(), live
+
+
+def test_weighted_inside_identity_and_zero_radius():
+    rng = np.random.default_rng(5)
+    Y = (rng.normal(size=(6, 4)) * 0.01).astype(np.float32)
+    w = np.ones(4, np.float32)
+    X = np.asarray(project_l1inf_weighted(jnp.asarray(Y), jnp.asarray(w),
+                                          1e6))
+    np.testing.assert_array_equal(X, Y)
+    X0 = np.asarray(project_l1inf_weighted(jnp.asarray(Y), jnp.asarray(w),
+                                           0.0))
+    np.testing.assert_array_equal(X0, np.zeros_like(Y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 10), m=st.integers(2, 10),
+       seed=st.integers(0, 2**31 - 1), cfrac=st.floats(0.05, 1.2))
+def test_property_weighted_vi(n, m, seed, cfrac):
+    rng = np.random.default_rng(seed)
+    Y = rng.normal(size=(n, m))
+    w = rng.uniform(0.3, 2.0, size=m)
+    nrm = float((w * np.abs(Y).max(axis=0)).sum())
+    if nrm <= 0:
+        return
+    C = float(cfrac * nrm)
+    X = np.asarray(project_l1inf_weighted(jnp.asarray(Y, jnp.float32),
+                                          jnp.asarray(w, jnp.float32), C))
+    assert float((w * np.abs(X).max(axis=0)).sum()) <= C * (1 + 1e-3) + 1e-6
+    feas = _random_feasible_l1inf_w(rng, n, m, w, C, 25) + [np.zeros_like(X)]
+    assert _vi_holds(Y, X, feas)
+
+
+# ---- VI certificates for the rest of the family ---------------------------
+
+def test_vi_unweighted_family():
+    rng = np.random.default_rng(7)
+    Y = rng.normal(size=(15, 10))
+    Yj = jnp.asarray(Y, jnp.float32)
+    C = 0.3 * float(np.abs(Y).max(axis=0).sum())
+    X = np.asarray(project_l1inf_newton(Yj, C))
+    feas = []
+    for _ in range(40):
+        Z = rng.normal(size=Y.shape)
+        Z *= rng.uniform(0, 1) * C / max(float(np.abs(Z).max(0).sum()), 1e-9)
+        feas.append(Z)
+    assert _vi_holds(Y, X, feas + [np.zeros_like(Y)])
+
+    # l1 ball
+    C1 = 0.3 * float(np.abs(Y).sum())
+    X1 = np.asarray(project_l1_ball(Yj, C1))
+    feas1 = []
+    for _ in range(40):
+        Z = rng.normal(size=Y.shape)
+        Z *= rng.uniform(0, 1) * C1 / max(float(np.abs(Z).sum()), 1e-9)
+        feas1.append(Z)
+    assert _vi_holds(Y, X1, feas1 + [np.zeros_like(Y)])
+
+    # l1,2 group ball
+    C2 = 0.3 * float(np.sqrt((Y ** 2).sum(0)).sum())
+    X2 = np.asarray(project_l12_ball(Yj, C2))
+    feas2 = []
+    for _ in range(40):
+        Z = rng.normal(size=Y.shape)
+        Z *= rng.uniform(0, 1) * C2 / max(
+            float(np.sqrt((Z ** 2).sum(0)).sum()), 1e-9)
+        feas2.append(Z)
+    assert _vi_holds(Y, X2, feas2 + [np.zeros_like(Y)])
