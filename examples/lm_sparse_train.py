@@ -54,6 +54,10 @@ out = train(model, batcher,
             TrainConfig(steps=args.steps, log_every=20, ckpt_every=100,
                         ckpt_dir=args.ckpt_dir, lr=1e-3,
                         with_projection=True))
-print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+if out["losses"]:
+    print(f"loss: {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f}")
+else:
+    print(f"no steps to run: resumed at the final checkpoint in "
+          f"{args.ckpt_dir} (delete it or raise --steps to train further)")
 for k, v in out["sparsity"].items():
     print(f"column sparsity {k}: {v:.1f}%")

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 verification: collect must be clean, then the full suite on CPU.
+#
+#   scripts/check.sh            # collect check + full suite
+#   scripts/check.sh --fast     # skip the slow subprocess multi-device tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+echo "== collect check (must be 0 errors) =="
+python -m pytest -q --collect-only >/dev/null
+
+FAST_DESELECT=()
+if [[ "${1:-}" == "--fast" ]]; then
+    FAST_DESELECT=(--ignore=tests/test_multidevice.py
+                   --ignore=tests/test_moe_and_serve.py
+                   --ignore=tests/test_pipeline_compression.py)
+fi
+
+echo "== tier-1: pytest =="
+# ${arr[@]+...} guard: empty-array expansion under `set -u` aborts on bash<4.4
+python -m pytest -x -q ${FAST_DESELECT[@]+"${FAST_DESELECT[@]}"}

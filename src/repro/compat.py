@@ -1,0 +1,71 @@
+"""JAX version compatibility shims, installed on ``import repro``.
+
+The codebase targets the current jax mesh API (``jax.make_mesh(...,
+axis_types=...)`` with ``jax.sharding.AxisType``); pinned containers may
+carry an older jax (0.4.x) where ``AxisType`` does not exist and
+``make_mesh`` rejects the ``axis_types`` kwarg. On such versions — and only
+there — this module backfills:
+
+  * ``jax.sharding.AxisType`` — an enum with Auto/Explicit/Manual members.
+    Old jax has no explicit-sharding mode, so the value is accepted and
+    ignored (Auto is old jax's only behavior, and Auto is all this codebase
+    uses).
+  * ``jax.make_mesh(..., axis_types=...)`` — a wrapper dropping the kwarg.
+
+Nothing is touched when the running jax already provides the API. Import
+order does not matter for device initialization: only attributes are set,
+no backend is touched.
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+import jax.sharding as _jsharding
+
+_installed = False
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+
+    if not hasattr(_jsharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        _jsharding.AxisType = AxisType
+
+    orig_make_mesh = getattr(jax, "make_mesh", None)
+    if orig_make_mesh is None:
+        # pre-0.4.35 jax: build the mesh directly
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            from jax.experimental import mesh_utils
+            dev = mesh_utils.create_device_mesh(tuple(axis_shapes),
+                                                devices=devices)
+            return _jsharding.Mesh(dev, tuple(axis_names))
+
+        jax.make_mesh = make_mesh
+    else:
+        try:
+            params = inspect.signature(orig_make_mesh).parameters
+        except (TypeError, ValueError):  # pragma: no cover - exotic builds
+            params = {}
+        if "axis_types" not in params:
+            @functools.wraps(orig_make_mesh)
+            def make_mesh(axis_shapes, axis_names, *, devices=None,
+                          axis_types=None):
+                # axis_types ignored: old jax is Auto-only, which is what
+                # the callers request.
+                return orig_make_mesh(axis_shapes, axis_names,
+                                      devices=devices)
+
+            jax.make_mesh = make_mesh
+
+    _installed = True

@@ -1,0 +1,25 @@
+"""Distributed substrate: logical-axis sharding rules, gradient compression,
+pipeline parallelism, and straggler detection (DESIGN.md §4).
+
+Submodules:
+  sharding    — default_rules / axis_rules / current_rules / logical_spec /
+                shard (GSPMD logical-axis layer under every model)
+  compression — error-feedback top-k + shared-scale int8, compressed_psum
+  pipeline    — build_pipeline_fn microbatch ring pipeline (shard_map)
+  watchdog    — StepWatchdog EWMA straggler detector
+"""
+from . import compression, pipeline, sharding, watchdog
+from .compression import (compressed_psum, ef_step, int8_dequantize,
+                          int8_quantize, topk_compress, topk_decompress)
+from .pipeline import build_pipeline_fn
+from .sharding import (axis_rules, current_rules, default_rules, logical_spec,
+                       shard)
+from .watchdog import StepWatchdog
+
+__all__ = [
+    "sharding", "compression", "pipeline", "watchdog",
+    "default_rules", "axis_rules", "current_rules", "logical_spec", "shard",
+    "ef_step", "int8_quantize", "int8_dequantize", "topk_compress",
+    "topk_decompress", "compressed_psum", "build_pipeline_fn",
+    "StepWatchdog",
+]

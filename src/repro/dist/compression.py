@@ -1,0 +1,139 @@
+"""Gradient compression for cross-pod data parallelism (DESIGN.md §4).
+
+Within-pod reductions stay exact (ICI bandwidth is cheap); only the cross-pod
+(DCI) combine is compressed:
+
+  * ``int8_quantize`` / ``int8_dequantize`` — shared-scale symmetric int8
+    (4x traffic cut, error <= scale/2 per element).
+  * ``topk_compress`` / ``topk_decompress`` — magnitude top-k sparsification
+    to (values, flat indices) and back.
+  * ``ef_step`` — error-feedback wrapper (Karimireddy et al.): the residual
+    of each compression round is fed back into the next, so the *cumulative*
+    transmitted gradient is unbiased and SGD converges at the dense rate.
+  * ``compressed_psum`` — the collective: a psum usable inside shard_map
+    whose payload is int8-quantized (shared scale via pmax) or top-k sparse.
+
+Everything is jit/shard_map-safe: k is derived from static shapes, scales
+are traced scalars.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["int8_quantize", "int8_dequantize", "topk_compress",
+           "topk_decompress", "ef_step", "compressed_psum"]
+
+
+# ---------------------------------------------------------------------------
+# int8 shared-scale quantization
+# ---------------------------------------------------------------------------
+
+def int8_quantize(x: jnp.ndarray,
+                  scale: jnp.ndarray = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric int8 quantization. Returns (q int8, scale f32 scalar) with
+    x ~= q * scale and |x - q*scale| <= scale/2. An explicit `scale` lets
+    participants of a collective share one scale (see compressed_psum)."""
+    xf = x.astype(jnp.float32)
+    if scale is None:
+        scale = jnp.max(jnp.abs(xf)) / 127.0
+    scale = jnp.maximum(scale, jnp.finfo(jnp.float32).tiny)
+    q = jnp.clip(jnp.round(xf / scale), -127.0, 127.0).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequantize(q: jnp.ndarray, scale: jnp.ndarray,
+                    dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# magnitude top-k
+# ---------------------------------------------------------------------------
+
+def _k_for(size: int, k_frac: float) -> int:
+    return max(1, min(size, int(round(size * k_frac))))
+
+
+def topk_compress(g: jnp.ndarray,
+                  k_frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep the k = round(k_frac * size) largest-|.| entries. Returns
+    (values (k,), flat int32 indices (k,)); k is static under jit."""
+    k = _k_for(g.size, k_frac)
+    flat = g.reshape(-1)
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32)
+
+
+def topk_decompress(vals: jnp.ndarray, idx: jnp.ndarray, shape,
+                    dtype) -> jnp.ndarray:
+    """Scatter (values, indices) back to a dense zero-filled array."""
+    size = 1
+    for d in shape:
+        size *= int(d)
+    dense = jnp.zeros((size,), dtype).at[idx].set(vals.astype(dtype))
+    return dense.reshape(shape)
+
+
+def ef_step(g: jnp.ndarray, err: jnp.ndarray,
+            k_frac: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One error-feedback compression round: sparsify (g + err), return
+    (sparse update to transmit, new residual). sparse + new_err == g + err
+    exactly, so no gradient mass is ever dropped — only delayed."""
+    corrected = g + err
+    vals, idx = topk_compress(corrected, k_frac)
+    sparse = topk_decompress(vals, idx, corrected.shape, corrected.dtype)
+    return sparse, corrected - sparse
+
+
+# ---------------------------------------------------------------------------
+# the collective
+# ---------------------------------------------------------------------------
+
+def compressed_psum(tree, axis_name: str, mode: str = "int8",
+                    k_frac: float = 0.05):
+    """psum of a gradient pytree over `axis_name` (inside shard_map) with a
+    compressed payload.
+
+    The compressed modes move the *compressed* representation across the
+    link — an all_gather of the narrow payload plus a local reduce — rather
+    than psum-ing a dequantized/densified array (which would put full-width
+    elements back on the wire and void the compression).
+
+    mode:
+      "none" — exact psum (baseline / within-pod).
+      "int8" — shared-scale int8: pmax of the local absmax fixes one scale,
+               the int8 payload is all_gathered and summed locally. For P
+               participants the error is <= P * scale/2 and the per-hop
+               payload is 1 byte/element vs 4 for an fp32 reduce.
+      "topk" — EF-free magnitude top-k: each participant transmits only its
+               k (values, indices) pairs, scatter-added locally (biased;
+               pair with ef_step residuals for convergence guarantees).
+    """
+    if mode == "none":
+        return jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g, axis_name), tree)
+
+    if mode == "int8":
+        def one(g):
+            absmax = jax.lax.pmax(jnp.max(jnp.abs(g.astype(jnp.float32))),
+                                  axis_name)
+            q, scale = int8_quantize(g, absmax / 127.0)
+            q_all = jax.lax.all_gather(q, axis_name)        # int8 on the wire
+            total = jnp.sum(q_all.astype(jnp.int32), axis=0)
+            return int8_dequantize(total, scale, g.dtype)
+        return jax.tree_util.tree_map(one, tree)
+
+    if mode == "topk":
+        def one(g):
+            vals, idx = topk_compress(g, k_frac)
+            vals_all = jax.lax.all_gather(vals, axis_name)  # (P, k)
+            idx_all = jax.lax.all_gather(idx, axis_name)
+            flat = jnp.zeros((g.size,), g.dtype).at[idx_all.reshape(-1)].add(
+                vals_all.reshape(-1).astype(g.dtype))
+            return flat.reshape(g.shape)
+        return jax.tree_util.tree_map(one, tree)
+
+    raise ValueError(f"unknown compression mode {mode!r}")

@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules — the GSPMD substrate (DESIGN.md §4).
+
+Every layer annotates params and activations with *logical* axis names
+("batch", "heads", "mlp", ...); this module owns the single mapping from
+logical names to physical mesh axes:
+
+  * ``default_rules(multi_pod=...)`` — the canonical DP(+pod) x TP(model)
+    layout with FSDP-over-data weights (launch/steps.py specializes it per
+    cell: decode moves the model axis onto the KV-cache sequence).
+  * ``axis_rules(mesh, rules)``      — context manager activating a
+    (mesh, rules) pair during tracing; thread-local, nestable.
+  * ``current_rules()``              — the innermost active (mesh, rules)
+    pair, or None (moe_shardmap uses this to pick its dispatch impl).
+  * ``shard(x, *names)``             — with_sharding_constraint through the
+    active rules; a no-op outside a context, on a None mesh, and on any dim
+    the mesh axes do not divide (25 heads on a 16-way axis replicate rather
+    than error — ``fit_spec`` below is the single divisibility policy,
+    shared with launch/steps.py's cache shardings).
+  * ``logical_spec(names, rules)``   — PartitionSpec from logical names
+    without constraining anything (out_shardings construction).
+
+Rules values may be a mesh axis name, a tuple of names (e.g. batch over
+("pod", "data")), or None (replicated). Unknown logical names replicate.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["default_rules", "axis_rules", "current_rules", "logical_spec",
+           "fit_spec", "shard"]
+
+Axes = Union[None, str, Tuple[str, ...]]
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+def default_rules(multi_pod: bool = False) -> dict:
+    """Logical-name -> mesh-axes mapping for the production train/prefill
+    layout: data parallel over ("pod",) "data", tensor parallel over "model",
+    FSDP weight sharding over "data". Decode/long-context cells override
+    cache_seq / kv_heads in launch/steps.rules_for_cell."""
+    batch = ("pod", "data") if multi_pod else "data"
+    return {
+        # parameters
+        "fsdp": "data",            # FSDP: weights sharded over the data axis
+        "mlp": "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",          # vocab is padded to /128 so this divides
+        "embed": None,
+        "experts": "model",        # EP: stacked expert dim
+        "layers": None,            # scan-stacked layer dim is never sharded
+        # activations
+        "batch": batch,
+        "seq": None,
+        "attn_seq": None,
+        "expert_cap": None,
+        # decode cache
+        "cache_batch": batch,
+        "cache_seq": None,
+    }
+
+
+# ---------------------------------------------------------------------------
+# (mesh, rules) context
+# ---------------------------------------------------------------------------
+
+_STATE = threading.local()
+
+
+def _stack():
+    stack = getattr(_STATE, "stack", None)
+    if stack is None:
+        stack = _STATE.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict]):
+    """Activate (mesh, rules) for shard() calls traced inside the block.
+    Passing mesh=None (single-device paths) makes shard() a no-op."""
+    _stack().append((mesh, rules))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_rules() -> Optional[Tuple[Optional[Mesh], Optional[dict]]]:
+    """Innermost active (mesh, rules) pair, or None outside any context."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+# ---------------------------------------------------------------------------
+# specs + constraints
+# ---------------------------------------------------------------------------
+
+def logical_spec(names: Sequence[Optional[str]],
+                 rules: Optional[dict]) -> P:
+    """PartitionSpec from logical axis names via `rules` (no divisibility
+    check — use for out_shardings where shapes are not at hand)."""
+    rules = rules or {}
+    return P(*[rules.get(n) if n is not None else None for n in names])
+
+
+def _axes_size(mesh: Mesh, axes: Axes) -> int:
+    if axes is None:
+        return 1
+    tup = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in tup:
+        if a not in mesh.shape:
+            return 0               # axis absent from this mesh -> replicate
+        size *= mesh.shape[a]
+    return size
+
+
+def fit_spec(mesh: Mesh, spec_axes: Sequence[Axes],
+             shape: Tuple[int, ...]) -> P:
+    """PartitionSpec from already-resolved mesh axes, dropping any that are
+    missing from the mesh or do not divide the corresponding dim (e.g.
+    batch=1 long-context decode, 25 heads on a 16-way axis). The single
+    divisibility policy — launch/steps.py uses it for cache shardings too."""
+    out = []
+    for dim, axes in zip(shape, spec_axes):
+        size = _axes_size(mesh, axes)
+        out.append(axes if size and dim % size == 0 else None)
+    return P(*out)
+
+
+def _fit_spec(mesh: Mesh, names: Sequence[Optional[str]], rules: dict,
+              shape: Tuple[int, ...]) -> P:
+    """Map logical names through rules, then fit to the mesh."""
+    axes = [rules.get(n) if n is not None else None for n in names]
+    return fit_spec(mesh, axes, shape)
+
+
+def shard(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """Constrain activation `x` to the sharding its logical `names` imply
+    under the innermost axis_rules context. One name (or None) per dim."""
+    state = current_rules()
+    if state is None:
+        return x
+    mesh, rules = state
+    if mesh is None or rules is None:
+        return x
+    if len(names) != x.ndim:
+        raise ValueError(
+            f"shard: {len(names)} names for rank-{x.ndim} array {x.shape}")
+    spec = _fit_spec(mesh, names, rules, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

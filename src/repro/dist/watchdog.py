@@ -1,0 +1,66 @@
+"""Straggler detection for the training loop (DESIGN.md §4).
+
+``StepWatchdog`` wraps each step in start()/stop() and keeps an EWMA of the
+step time. A step slower than ``threshold`` x EWMA (once ``grace_steps``
+warm-up steps have completed — the first steps include compilation) fires
+``on_straggler`` and is recorded in ``.events``; straggler samples are NOT
+folded into the EWMA so one slow host cannot drag the baseline up and mask
+the next one, and warm-up samples fold clamped to threshold x EWMA for the
+same reason.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+__all__ = ["StepWatchdog"]
+
+
+class StepWatchdog:
+    """Per-step wall-clock straggler detector.
+
+    threshold:    multiple of the EWMA above which a step is a straggler.
+    grace_steps:  completed steps before detection arms (compile warm-up).
+    alpha:        EWMA smoothing factor (weight of the newest sample).
+    on_straggler: callback (step, dt_seconds, ewma_seconds).
+    clock:        injectable time source (tests); defaults to time.monotonic.
+    """
+
+    def __init__(self, threshold: float = 3.0, grace_steps: int = 5,
+                 alpha: float = 0.25,
+                 on_straggler: Optional[Callable[[int, float, float],
+                                                 None]] = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.threshold = float(threshold)
+        self.grace_steps = int(grace_steps)
+        self.alpha = float(alpha)
+        self.on_straggler = on_straggler
+        self.clock = clock
+        self.events: List[Tuple[int, float, float]] = []
+        self.ewma: Optional[float] = None
+        self._n = 0
+        self._t0: Optional[float] = None
+
+    def start(self) -> None:
+        self._t0 = self.clock()
+
+    def stop(self, step: int) -> float:
+        """End timing for `step`; returns the step duration in seconds."""
+        if self._t0 is None:
+            raise RuntimeError("StepWatchdog.stop() without start()")
+        dt = self.clock() - self._t0
+        self._t0 = None
+        armed = self.ewma is not None and self._n >= self.grace_steps
+        if armed and dt > self.threshold * self.ewma:
+            self.events.append((int(step), float(dt), float(self.ewma)))
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt, self.ewma)
+        elif self.ewma is None:
+            self.ewma = dt
+        else:
+            # unarmed spikes fold clamped so warm-up stragglers cannot
+            # inflate the baseline past the detection threshold
+            dt_c = min(dt, self.threshold * self.ewma)
+            self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * dt_c
+        self._n += 1
+        return dt

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..dist.sharding import default_rules, axis_rules, logical_spec
+from ..dist.sharding import default_rules, axis_rules, logical_spec, fit_spec
 from ..models.zoo import Model, SHAPES
 from ..models.transformer import ArchConfig
 from ..optim import AdamConfig, AdamState, adam_init, adam_update
@@ -68,26 +68,6 @@ def batch_shardings(batch_abstract: Dict[str, Any], mesh: Mesh, rules: dict):
     return out
 
 
-def _axis_size(mesh: Mesh, axes) -> int:
-    if axes is None:
-        return 1
-    if isinstance(axes, str):
-        return mesh.shape[axes]
-    n = 1
-    for a in axes:
-        n *= mesh.shape[a]
-    return n
-
-
-def _fit_spec(mesh: Mesh, spec_axes, shape) -> P:
-    """Drop sharding on dims that do not divide the mesh axes (e.g. batch=1
-    long-context decode, 50 SSM heads on a 16-way axis)."""
-    out = []
-    for dim, axes in zip(shape, spec_axes):
-        out.append(axes if dim % _axis_size(mesh, axes) == 0 else None)
-    return P(*out)
-
-
 def cache_shardings(cache_abstract, mesh: Mesh, rules: dict):
     """Sharding tree for a decode cache, by leaf name. Leaves under the
     scanned 'blocks' subtree carry a leading layers dim (never sharded);
@@ -114,7 +94,7 @@ def cache_shardings(cache_abstract, mesh: Mesh, rules: dict):
             axes = [None] * leaf.ndim
         if leaf.ndim == len(axes) + 1:  # stacked (cycles, ...) under blocks
             axes = [None] + axes
-        return _named(mesh, _fit_spec(mesh, axes, leaf.shape))
+        return _named(mesh, fit_spec(mesh, axes, leaf.shape))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
     return jax.tree_util.tree_unflatten(treedef,

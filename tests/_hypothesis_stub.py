@@ -1,0 +1,116 @@
+"""Deterministic fallback for the subset of hypothesis this suite uses.
+
+Installed by conftest.py ONLY when the real hypothesis package is missing
+(the pinned container has no network): @given draws `max_examples` examples
+from a fixed-seed PRNG instead of hypothesis' adaptive search. Property
+tests still run as deterministic fuzz tests; install the real package
+(`pip install -e .[test]`) to get shrinking and the full search strategy.
+
+Supported surface: given(**kwargs), settings(max_examples, deadline),
+strategies.integers/floats/booleans/sampled_from/lists.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+
+_DEFAULT_MAX_EXAMPLES = 50
+_SEED = 0x5EED_1F1F
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw  # (random.Random) -> value
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self.draw(rng)))
+
+    def filter(self, pred):
+        def draw(rng):
+            for _ in range(1000):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise RuntimeError("filter predicate never satisfied")
+        return _Strategy(draw)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value):
+    def draw(rng):
+        # hit the endpoints occasionally: they are the usual edge cases
+        r = rng.random()
+        if r < 0.05:
+            return float(min_value)
+        if r < 0.10:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: rng.choice(elements))
+
+
+def lists(elem, min_size=0, max_size=10):
+    def draw(rng):
+        k = rng.randint(min_size, max_size)
+        return [elem.draw(rng) for _ in range(k)]
+    return _Strategy(draw)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(_SEED)
+            for i in range(n):
+                example = {k: s.draw(rng) for k, s in strategies.items()}
+                try:
+                    fn(*args, **kwargs, **example)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example (#{i}): {example!r}") from e
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        # hide the consumed params from pytest's fixture resolution (real
+        # hypothesis does the same): drop __wrapped__ so inspect.signature
+        # doesn't recover the original argument list
+        del wrapper.__wrapped__
+        orig = inspect.signature(fn)
+        keep = [p for name, p in orig.parameters.items()
+                if name not in strategies]
+        wrapper.__signature__ = orig.replace(parameters=keep)
+        return wrapper
+    return deco
+
+
+def install(sys_modules):
+    """Register stub modules under the 'hypothesis' names."""
+    strategies_mod = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists"):
+        setattr(strategies_mod, name, globals()[name])
+    root = types.ModuleType("hypothesis")
+    root.given = given
+    root.settings = settings
+    root.strategies = strategies_mod
+    root.__is_repro_stub__ = True
+    sys_modules["hypothesis"] = root
+    sys_modules["hypothesis.strategies"] = strategies_mod
