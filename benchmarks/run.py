@@ -3,6 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV. Default scale completes on a
 single CPU core in ~20-30 min; ``--full`` uses the paper's exact sizes;
 ``--only PREFIX`` filters benches; ``--quick`` trims to a smoke pass.
+
+The ``proj_engine`` bench additionally writes machine-readable
+``BENCH_proj.json`` (sparsity-adaptive engine trajectory: warm-start Newton
+counts, J-proportional work counter, packed-batch vs per-matrix) — CI
+uploads it as an artifact and ``scripts/check.sh --bench-smoke`` gates on
+it.
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ def main() -> None:
             ("fig1", lambda: proj_bench.fig1_radius_sweep(
                 n=200, m=200, radii=(0.01, 1.0))),
             ("jaxvar", lambda: proj_bench.jax_variants(n=128, m=128)),
+            ("proj_engine", lambda: proj_bench.engine_report(quick=True)),
         ]
     else:
         benches = [
@@ -36,6 +43,7 @@ def main() -> None:
             ("fig2", proj_bench.fig2_shape_sweep),
             ("fig3", proj_bench.fig3_size_growth),
             ("jaxvar", proj_bench.jax_variants),
+            ("proj_engine", lambda: proj_bench.engine_report(quick=False)),
             ("table1", lambda: sae_bench.table1_synthetic(full=args.full)),
             ("table2", sae_bench.table2_lung),
             ("fig5-8", sae_bench.fig_radius_curves),

@@ -1,13 +1,39 @@
 #!/usr/bin/env bash
 # Tier-1 verification: collect must be clean, then the full suite on CPU.
 #
-#   scripts/check.sh            # collect check + full suite
-#   scripts/check.sh --fast     # skip the slow subprocess multi-device tests
+#   scripts/check.sh               # collect check + full suite
+#   scripts/check.sh --fast        # skip the slow subprocess multi-device tests
+#   scripts/check.sh --bench-smoke # quick projection-engine benchmark gate:
+#                                  # runs benchmarks/run.py --quick, emits
+#                                  # BENCH_proj.json (CI uploads it as an
+#                                  # artifact), fails if the packed-batch
+#                                  # path is >1.15x slower than per-matrix
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    echo "== bench smoke: projection engine =="
+    python -m benchmarks.run --quick --only proj_engine
+    python - <<'PYEOF'
+import json
+d = json.load(open("BENCH_proj.json"))
+ratio = d["packed"]["ratio_packed_vs_per_matrix"]
+warm = d["warm_start"]["steady_state_newton_steps"]
+diff = d["packed"]["max_abs_diff"]
+assert ratio <= 1.15, (
+    f"packed-batch path is {ratio:.2f}x the per-matrix time (>1.15x gate)")
+assert diff <= 1e-4, f"packed != per-matrix (max abs diff {diff:.3e})"
+# measured median is ~1.5-2; gate at 3 for fp/platform headroom (a broken
+# warm start regresses to the cold ~5-8)
+assert warm <= 3, f"steady-state warm Newton steps {warm} > 3"
+print(f"bench smoke OK: packed/per-matrix {ratio:.2f}x, "
+      f"steady-state warm Newton steps {warm}, packed max diff {diff:.2e}")
+PYEOF
+    exit 0
+fi
 
 echo "== collect check (must be 0 errors) =="
 python -m pytest -q --collect-only >/dev/null

@@ -22,14 +22,30 @@ On the segment theta in (b_{k_j-1}, b_{k_j}] of each column, Eq. (19) of the
 paper gives theta = (sum_A S_{k_j}/k_j - C) / (sum_A 1/k_j) over the active
 set A.
 
-Two exact implementations, both jit/pjit/vmap-safe:
+Exact implementations, all jit/pjit/vmap-safe:
 
   * ``project_l1inf_sorted``  — vectorized total order (Quattoni, TPU-native):
     one global sort of all nm breakpoints + prefix scan of slope payloads,
     then select the unique segment. O(nm log nm) work, ~15 parallel ops.
   * ``project_l1inf_newton``  — semismooth Newton on theta (Chu-class, the
     production path): per-column sort once, then finitely-convergent monotone
-    Newton iterations, each a vectorized compare-and-sum.
+    Newton iterations, each a vectorized compare-and-sum. The per-column
+    water level mu is carried through the loop, so the final clip needs no
+    extra active-set pass.
+  * ``project_l1inf_segmented`` — many independent balls in ONE packed
+    (n, M) buffer: a per-column segment id maps each column to its ball and
+    Eq. (19) becomes a segment-sum, so a whole group of weight matrices is
+    projected with a single fused sweep (see ``core.constraints`` packing).
+
+Warm-start contract (``theta0=``): ``project_l1inf_newton`` /
+``project_l1inf_segmented`` (and the Pallas engine in ``kernels/l1inf``)
+accept the previous solve's theta* as ``theta0``. Any value >= 0 is safe —
+an overshooting guess (theta0 > theta*) is repaired by the first unclamped
+Eq.-(19) step, which lands at or below theta* (the supporting line of the
+convex g crosses C left of theta*), after which the usual monotone ascent
+resumes. Under SGD the optimum moves O(lr) per step, so steady-state solves
+converge in 1-2 Newton iterations instead of ~8-15. Exactness is unaffected:
+the final theta is still the exact root for its active set.
 
 The paper's own heap algorithm (inherently sequential) lives in
 ``repro.core.heap`` as the faithful CPU reference; see DESIGN.md §2 for the
@@ -38,7 +54,7 @@ hardware-adaptation rationale.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +64,16 @@ __all__ = [
     "project_l1inf",
     "project_l1inf_sorted",
     "project_l1inf_newton",
+    "project_l1inf_newton_stats",
+    "project_l1inf_segmented",
     "theta_l1inf",
     "column_support",
+    "active_compaction",
 ]
+
+# Sentinel theta assigned to padding columns (dummy segment) in packed
+# buffers: far above any real breakpoint, so they are never active.
+_PAD_THETA = 1e30
 
 
 def l1inf_norm(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
@@ -64,6 +87,27 @@ def l1inf_norm(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
 def column_support(X: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
     """Boolean per-column support (True where the column is not all-zero)."""
     return jnp.any(X != 0, axis=axis)
+
+
+def active_compaction(active: jnp.ndarray,
+                      key: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stable permutation packing the True columns of `active` first.
+
+    Returns (perm, num_active): ``x[:, perm]`` is the packed layout with the
+    surviving columns occupying the leading ``num_active`` slots, and
+    ``out.at[perm].set(packed)`` is the exact scatter-back (a permutation is
+    bijective and values are untouched, so pack -> solve -> scatter is
+    exact). With ``key`` given, the active prefix is additionally ordered by
+    ascending key — the Pallas engine in ``kernels/l1inf/ops.py`` passes the
+    negated death margin (theta - colsum) so that column deaths peel off the
+    END of the prefix as theta rises (see DESIGN.md §3).
+    """
+    if key is None:
+        key = jnp.zeros(active.shape, jnp.float32)
+    sort_key = jnp.where(active, key.astype(jnp.float32), jnp.inf)
+    perm = jnp.argsort(sort_key)
+    return perm, jnp.sum(active.astype(jnp.int32))
 
 
 # -----------------------------------------------------------------------------
@@ -87,7 +131,7 @@ def _sorted_stats(A: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray
 
 
 def _theta_state(S: jnp.ndarray, b: jnp.ndarray, theta: jnp.ndarray):
-    """Per-column segment state at threshold `theta`.
+    """Per-column segment state at threshold `theta` (scalar or (m,) vector).
 
     Returns (k, S_k, active): k in [1, n] the active count, S_k the prefix sum
     at k, active=False where the column is dominated (theta >= b_n = S_n).
@@ -104,38 +148,56 @@ def _theta_state(S: jnp.ndarray, b: jnp.ndarray, theta: jnp.ndarray):
     return k.astype(dt), S_k, active
 
 
-def _finalize(Y: jnp.ndarray, A: jnp.ndarray, S: jnp.ndarray, b: jnp.ndarray,
-              theta: jnp.ndarray) -> jnp.ndarray:
-    """Clip |Y| at the per-column water level implied by theta, restore signs."""
+def _eq19_step(S, b, Csafe, theta):
+    """One Eq.-(19) evaluation at `theta`: the tangent-line root of g and the
+    per-column water level mu(theta). Scalar-ball version (theta scalar);
+    the segmented twin lives inside ``project_l1inf_segmented``."""
     k, S_k, active = _theta_state(S, b, theta)
-    mu = jnp.where(active, (S_k - theta) / k, 0.0)
-    mu = jnp.maximum(mu, 0.0)
-    return jnp.sign(Y) * jnp.minimum(A, mu[None, :])
+    Aa = jnp.sum(jnp.where(active, S_k / k, 0.0))
+    Ba = jnp.sum(jnp.where(active, 1.0 / k, 0.0))
+    new = (Aa - Csafe) / jnp.maximum(Ba, jnp.finfo(S.dtype).tiny)
+    mu = jnp.where(active, jnp.maximum((S_k - theta) / k, 0.0), 0.0)
+    return new, mu
 
 
-def _newton_theta(S: jnp.ndarray, b: jnp.ndarray, C: jnp.ndarray,
-                  theta0: jnp.ndarray, max_iter: int = 32) -> jnp.ndarray:
-    """Monotone semismooth Newton for g(theta) = C. Finite convergence since g
-    is convex decreasing piecewise-linear and theta0 <= theta*."""
-    def step(theta):
-        k, S_k, active = _theta_state(S, b, theta)
-        Aa = jnp.sum(jnp.where(active, S_k / k, 0.0))
-        Ba = jnp.sum(jnp.where(active, 1.0 / k, 0.0))
-        # Ba > 0 guaranteed while theta <= theta* and C > 0
-        return (Aa - C) / jnp.maximum(Ba, jnp.finfo(S.dtype).tiny)
+def _newton_solve(S, b, Csafe, theta_start, max_iter):
+    """Warm-start-safe semismooth Newton for g(theta) = Csafe.
+
+    `theta_start` may be ANY value >= 0 (cold lower bound or a stale warm
+    start above theta*). Two unclamped Eq.-(19) steps re-establish a point
+    <= theta* (tangents of the convex g cross C left of theta*), then the
+    classic monotone ascent runs to finite convergence. The water level mu
+    is carried through the loop, so callers need no extra active-set pass
+    after convergence. Returns (theta, mu, n_eq19_evals).
+
+    NOTE: the segmented twin of this loop lives in project_l1inf_segmented
+    and the Pallas engine's in kernels/l1inf/ops.py::_engine — structural
+    fixes here (bootstrap, cap-exit re-eval) must be mirrored there.
+    """
+    t1, _ = _eq19_step(S, b, Csafe, theta_start)
+    t1 = jnp.maximum(t1, 0.0)
+    t2, mu1 = _eq19_step(S, b, Csafe, t1)
+    t2 = jnp.maximum(t2, t1)
 
     def cond(carry):
-        i, theta, prev = carry
-        return jnp.logical_and(i < max_iter, theta > prev)
+        i, th, prev, _ = carry
+        return jnp.logical_and(i < max_iter, th > prev)
 
     def body(carry):
-        i, theta, _ = carry
-        return (i + 1, step(theta), theta)
+        i, th, _, _ = carry
+        new, mu = _eq19_step(S, b, Csafe, th)
+        return (i + 1, jnp.maximum(new, th), th, mu)
 
-    theta1 = step(theta0)
-    _, theta, _ = jax.lax.while_loop(
-        cond, body, (jnp.asarray(1), theta1, theta0))
-    return theta
+    i, th, prev, mu = jax.lax.while_loop(
+        cond, body, (jnp.asarray(2, jnp.int32), t2, t1, mu1))
+    # On convergence th == prev and the carried mu was evaluated at th. If
+    # the max_iter cap cut the ascent mid-stride (th > prev), the carried mu
+    # lags one iterate — re-evaluate at th so (theta, mu) stay consistent.
+    # lax.cond keeps the common converged case free of the extra pass.
+    mu = jax.lax.cond(th > prev,
+                      lambda: _eq19_step(S, b, Csafe, th)[1],
+                      lambda: mu)
+    return th, mu, i
 
 
 def _prep(Y: jnp.ndarray, axis: int):
@@ -202,9 +264,11 @@ def project_l1inf_sorted(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
     theta = jnp.maximum(theta_t[t], 0.0)
 
     # Newton polish (exact active set => Eq. 19 exact; fixes boundary wobble)
-    theta = _newton_theta(S, b, C, theta, max_iter=4)
+    # and carried mu — the clip reuses the last evaluation's water level.
+    Csafe = jnp.where(C > 0, C, jnp.asarray(1.0, dt))
+    _, mu, _ = _newton_solve(S, b, Csafe, theta, max_iter=4)
 
-    X = _finalize(Yt, A, S, b, theta)
+    X = jnp.sign(Yt) * jnp.minimum(A, mu[None, :])
     inside = jnp.sum(Z[0]) <= C
     X = jnp.where(inside, Yt, X)
     X = jnp.where(C > 0, X, jnp.zeros_like(X))
@@ -215,47 +279,192 @@ def project_l1inf_sorted(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
 # semismooth Newton (production path)
 # -----------------------------------------------------------------------------
 
+def _project_newton_impl(Yt, C, dt, theta0, max_iter):
+    """Shared Newton engine body. Returns (X, theta_out, iters)."""
+    A = jnp.abs(Yt)
+    n, m = A.shape
+    Z, S, b = _sorted_stats(A)
+    colmax = Z[0]
+    colsum = S[n - 1]
+    norm = jnp.sum(colmax)
+
+    Csafe = jnp.where(C > 0, C, jnp.asarray(1.0, dt))
+    # theta_cold: Eq. (19) with every column active at k=1 (the paper's line 2)
+    cold = jnp.maximum((norm - Csafe) / m, 0.0)
+    if theta0 is None:
+        start = cold
+    else:
+        start = jnp.maximum(jnp.maximum(jnp.asarray(theta0, dt), 0.0), cold)
+
+    theta, mu, iters = _newton_solve(S, b, Csafe, start, max_iter)
+
+    X = jnp.sign(Yt) * jnp.minimum(A, mu[None, :])
+    inside = norm <= C
+    X = jnp.where(inside, Yt, X)
+    X = jnp.where(C > 0, X, jnp.zeros_like(X))
+    # theta consistent with the C > 0 gating: C <= 0 removes every column,
+    # i.e. the norm-removal threshold max_j ||y_j||_1.
+    theta_out = jnp.where(C > 0,
+                          jnp.where(inside, jnp.zeros_like(theta), theta),
+                          jnp.max(colsum, initial=0.0))
+    return X, theta_out, iters
+
+
 @functools.partial(jax.jit, static_argnames=("axis", "max_iter"))
 def project_l1inf_newton(Y: jnp.ndarray, C, axis: int = 0,
-                         max_iter: int = 32) -> jnp.ndarray:
+                         max_iter: int = 32, *,
+                         theta0: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Exact projection via monotone semismooth Newton on theta.
 
-    One per-column sort + cumsum, then <= ~15 Newton steps, each a fused
-    compare-and-sum over the breakpoint matrix. This is the default inside
-    jitted/pjitted train steps (no global sort, no long prefix scans).
+    One per-column sort + cumsum, then <= ~15 Newton steps (1-2 with a good
+    ``theta0`` warm start — see the module docstring for the contract), each
+    a fused compare-and-sum over the breakpoint matrix. The water level mu is
+    carried through the loop, so no extra active-set pass runs after
+    convergence. This is the default inside jitted/pjitted train steps.
     """
     Yt, transpose, dt = _prep(Y, axis)
     C = jnp.asarray(C, dtype=dt)
-    A = jnp.abs(Yt)
-    n, m = A.shape
+    X, _, _ = _project_newton_impl(Yt, C, dt, theta0, max_iter)
+    return _post(X, Y, transpose)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "max_iter"))
+def project_l1inf_newton_stats(Y: jnp.ndarray, C, axis: int = 0,
+                               max_iter: int = 32, *,
+                               theta0: Optional[jnp.ndarray] = None):
+    """Like ``project_l1inf_newton`` but returns (X, stats).
+
+    stats = {"theta": theta*, "iters": #Eq.-(19) evaluations}. ``theta`` is
+    what train loops thread back in as next step's ``theta0`` warm start.
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    X, theta, iters = _project_newton_impl(Yt, C, dt, theta0, max_iter)
+    return _post(X, Y, transpose), {"theta": theta, "iters": iters}
+
+
+# -----------------------------------------------------------------------------
+# segmented Newton: many independent balls in one packed buffer
+# -----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "max_iter"))
+def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
+                            *, num_segments: int,
+                            theta0: Optional[jnp.ndarray] = None,
+                            max_iter: int = 32):
+    """Project each column group of a packed (n, M) buffer onto its own ball.
+
+    ``seg_ids`` (M,) int32 maps column -> segment in [0, num_segments);
+    columns with ``seg_ids == num_segments`` are lane padding (dummy segment:
+    never active, projected to themselves). ``C_seg`` (num_segments,) holds
+    one radius per segment. The max axis is 0 (callers canonicalize).
+
+    The Newton iteration runs on a theta VECTOR (one per segment): the
+    Eq.-(19) sums become segment-sums and every step is still one fused
+    compare-and-sum over the whole packed buffer — one sweep per step for
+    ALL matrices of a group instead of one solve per matrix. ``theta0``
+    (num_segments,) warm-starts all segments (see module docstring).
+
+    Returns (X, theta_seg, iters) with iters the max Eq.-(19) evaluation
+    count across segments.
+    """
+    if Y.ndim != 2:
+        raise ValueError("packed buffer must be 2-D")
+    dt = jnp.promote_types(Y.dtype, jnp.float32)
+    A = jnp.abs(Y.astype(dt))
+    n, M = A.shape
+    G = int(num_segments)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    C_seg = jnp.asarray(C_seg, dt)
+    tiny = jnp.finfo(dt).tiny
 
     Z, S, b = _sorted_stats(A)
-    # theta_0: Eq. (19) with every column active at k=1 (the paper's line 2)
-    theta0 = (jnp.sum(S[0]) - C) / m
-    theta0 = jnp.maximum(theta0, 0.0)
-    theta = _newton_theta(S, b, C, theta0, max_iter=max_iter)
+    colmax = Z[0]
+    valid = seg_ids < G
+    sum_seg = functools.partial(jax.ops.segment_sum, segment_ids=seg_ids,
+                                num_segments=G + 1)
+    norm_seg = sum_seg(jnp.where(valid, colmax, 0.0))[:G]
+    m_seg = sum_seg(valid.astype(dt))[:G]
 
-    X = _finalize(Yt, A, S, b, theta)
-    inside = jnp.sum(Z[0]) <= C
-    X = jnp.where(inside, Yt, X)
-    X = jnp.where(C > 0, X, jnp.zeros_like(X))
-    return _post(X, Y, transpose)
+    Csafe = jnp.where(C_seg > 0, C_seg, jnp.ones_like(C_seg))
+    cold = jnp.maximum((norm_seg - Csafe) / jnp.maximum(m_seg, 1.0), 0.0)
+    if theta0 is None:
+        start = cold
+    else:
+        start = jnp.maximum(jnp.maximum(jnp.asarray(theta0, dt), 0.0), cold)
+
+    def theta_cols(th_seg):
+        ext = jnp.concatenate([th_seg, jnp.full((1,), _PAD_THETA, dt)])
+        return ext[jnp.minimum(seg_ids, G)]
+
+    def eval_step(th_seg):
+        th_col = theta_cols(th_seg)
+        k, S_k, active = _theta_state(S, b, th_col)
+        active = jnp.logical_and(active, valid)
+        Aa = sum_seg(jnp.where(active, S_k / k, 0.0))[:G]
+        Ba = sum_seg(jnp.where(active, 1.0 / k, 0.0))[:G]
+        new = (Aa - Csafe) / jnp.maximum(Ba, tiny)
+        mu = jnp.where(active, jnp.maximum((S_k - th_col) / k, 0.0), 0.0)
+        return new, mu
+
+    # NOTE: this outer loop is the jnp twin of the Pallas engine's in
+    # kernels/l1inf/ops.py::_engine — bootstrap, monotone ascent, carried
+    # mu, and the cap-exit re-eval must stay in sync between the two.
+    # Clamp the repair to the cold bound (> 0 for outside-ball segments),
+    # matching the Pallas engine, which additionally NEEDS it to avoid the
+    # degenerate theta=0 water level of its bisection payloads.
+    t1 = jnp.maximum(eval_step(start)[0], cold)
+    t2, mu1 = eval_step(t1)
+    t2 = jnp.maximum(t2, t1)
+
+    def cond(carry):
+        i, th, prev, _ = carry
+        return jnp.logical_and(i < max_iter, jnp.any(th > prev))
+
+    def body(carry):
+        i, th, _, _ = carry
+        new, mu = eval_step(th)
+        return (i + 1, jnp.maximum(new, th), th, mu)
+
+    iters, theta, prev, mu = jax.lax.while_loop(
+        cond, body, (jnp.asarray(2, jnp.int32), t2, t1, mu1))
+    # max_iter-cap exit: the carried mu lags the final theta by one iterate
+    # for the still-moving segments; re-evaluate to keep (theta, mu)
+    # consistent (free when converged).
+    mu = jax.lax.cond(jnp.any(theta > prev),
+                      lambda: eval_step(theta)[1],
+                      lambda: mu)
+
+    X = jnp.sign(Y.astype(dt)) * jnp.minimum(A, mu[None, :])
+    inside_seg = norm_seg <= C_seg
+    zero_seg = C_seg <= 0
+    ext_b = jnp.concatenate([inside_seg, jnp.array([True])])
+    inside_col = ext_b[jnp.minimum(seg_ids, G)]       # padding: identity
+    ext_z = jnp.concatenate([zero_seg, jnp.array([False])])
+    zero_col = ext_z[jnp.minimum(seg_ids, G)]
+    X = jnp.where(inside_col[None, :], Y.astype(dt), X)
+    X = jnp.where(zero_col[None, :], 0.0, X)
+
+    seg_max = jax.ops.segment_max(
+        jnp.where(valid, S[n - 1], 0.0), seg_ids, num_segments=G + 1)[:G]
+    theta_out = jnp.where(zero_seg, seg_max,
+                          jnp.where(inside_seg, 0.0, theta))
+    return X.astype(Y.dtype), theta_out, iters
 
 
 @functools.partial(jax.jit, static_argnames=("axis",))
 def theta_l1inf(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
     """The optimal threshold theta* (0 if Y is already inside the ball).
 
+    For C <= 0 the projection is the zero matrix (see ``project_l1inf_*``'s
+    C > 0 gating); the consistent threshold is the norm-removal level
+    max_j ||y_j||_1 — the smallest theta at which every column dies.
+
     Used for the paper's Figs. 6/8 (theta as a function of the radius)."""
     Yt, _, dt = _prep(Y, axis)
     C = jnp.asarray(C, dtype=dt)
-    A = jnp.abs(Yt)
-    Z, S, b = _sorted_stats(A)
-    m = A.shape[1]
-    theta0 = jnp.maximum((jnp.sum(S[0]) - C) / m, 0.0)
-    theta = _newton_theta(S, b, C, theta0)
-    inside = jnp.sum(Z[0]) <= C
-    return jnp.where(inside, jnp.zeros_like(theta), theta)
+    _, theta, _ = _project_newton_impl(Yt, C, dt, None, 32)
+    return theta
 
 
 def project_l1inf(Y: jnp.ndarray, C, axis: int = 0,

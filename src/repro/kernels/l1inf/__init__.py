@@ -1,3 +1,3 @@
-from .ops import project_l1inf_pallas
+from .ops import project_l1inf_pallas, project_l1inf_pallas_segmented
 from .kernel import colstats, mu_solve, clip_apply
 from . import ref

@@ -5,13 +5,18 @@ instead of heaps (sequential) or per-column sorts (log n HBM passes under
 XLA), the water-level solve is FUSED in VMEM — each grid program loads an
 (n x bm) tile of |Y| once and runs the entire per-column bisection +
 Michelot-polish iteration on-chip. One HBM pass per outer Newton step on
-theta (<= ~8 steps), versus sort-based lowering that materializes sorted
-copies and prefix sums in HBM.
+theta, and with the sparsity-adaptive engine in ``ops.py`` the pass only
+covers the compacted active-column prefix (J-proportional work; DESIGN.md
+§3).
 
 Kernels:
   * colstats:   per-column (sum, max) of |Y|, row-tiled accumulation
   * mu_solve:   per-column water level mu_j(theta) + exact (k_j, S_kj)
-                payloads for the outer Eq.-(19) Newton update
+                payloads for the outer Eq.-(19) Newton update. theta may be
+                a scalar (one ball) or a per-column vector (packed
+                multi-ball buffers, one theta per segment). An SMEM-style
+                active-block count lets grid programs beyond the compacted
+                active prefix skip the solve entirely.
   * clip_apply: X = sign(Y) * min(|Y|, mu_j), fully tiled, memory-bound
 
 All kernels use explicit BlockSpec VMEM tiling and are validated against
@@ -24,6 +29,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 _NEG_BIG = -1e30
 
@@ -72,64 +78,108 @@ def colstats(Y: jnp.ndarray, *, block_m: int = 128, block_n: int = 512,
 # mu_solve: fused per-column water-level solve at a given theta
 # -----------------------------------------------------------------------------
 
-def _mu_solve_kernel(theta_ref, y_ref, mu_ref, k_ref, s_ref, act_ref,
-                     *, n_bisect: int, n_polish: int):
-    y = jnp.abs(y_ref[...].astype(jnp.float32))          # (n, bm) in VMEM
-    theta = theta_ref[0, 0]
-    colsum = jnp.sum(y, axis=0)
-    colmax = jnp.max(y, axis=0)
-    active = colsum > theta
+def _mu_solve_kernel(nact_ref, theta_ref, y_ref, mu_ref, k_ref, s_ref,
+                     act_ref, *, n_bisect: int, n_polish: int):
+    j = pl.program_id(0)
 
-    # --- bisection: shrink [lo, hi] around mu*; removed(mu) decreasing ------
-    def bis(_, lohi):
-        lo, hi = lohi
-        mid = 0.5 * (lo + hi)
-        removed = jnp.sum(jnp.maximum(y - mid[None, :], 0.0), axis=0)
-        ge = removed >= theta
-        return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid)
+    @pl.when(j < nact_ref[0])
+    def _solve():
+        y = jnp.abs(y_ref[...].astype(jnp.float32))      # (n, bm) in VMEM
+        theta = theta_ref[0, :]                          # (1,) or (bm,)
+        colsum = jnp.sum(y, axis=0)
+        colmax = jnp.max(y, axis=0)
+        active = colsum > theta
 
-    lo, hi = jax.lax.fori_loop(
-        0, n_bisect, bis, (jnp.zeros_like(colsum), colmax))
+        # --- bisection: shrink [lo, hi] around mu*; removed(mu) decreasing --
+        def bis(_, lohi):
+            lo, hi = lohi
+            mid = 0.5 * (lo + hi)
+            removed = jnp.sum(jnp.maximum(y - mid[None, :], 0.0), axis=0)
+            ge = removed >= theta
+            return jnp.where(ge, mid, lo), jnp.where(ge, hi, mid)
 
-    # --- Michelot polish from below (monotone, finitely convergent) ---------
-    def mich(_, mu):
+        lo, hi = jax.lax.fori_loop(
+            0, n_bisect, bis, (jnp.zeros_like(colsum), colmax))
+
+        # --- Michelot polish from below (monotone, finitely convergent) -----
+        def mich(_, mu):
+            gt = y > mu[None, :]
+            k = jnp.maximum(jnp.sum(gt.astype(jnp.float32), axis=0), 1.0)
+            S = jnp.sum(jnp.where(gt, y, 0.0), axis=0)
+            return jnp.maximum((S - theta) / k, mu)
+
+        mu = jax.lax.fori_loop(0, n_polish, mich, lo)
+        mu = jnp.maximum(mu, 0.0)
+
+        # exact payloads at the solved level
         gt = y > mu[None, :]
         k = jnp.maximum(jnp.sum(gt.astype(jnp.float32), axis=0), 1.0)
         S = jnp.sum(jnp.where(gt, y, 0.0), axis=0)
-        return jnp.maximum((S - theta) / k, mu)
 
-    mu = jax.lax.fori_loop(0, n_polish, mich, lo)
-    mu = jnp.maximum(mu, 0.0)
+        mu_ref[...] = jnp.where(active, mu, 0.0)[None, :]
+        k_ref[...] = jnp.where(active, k, 1.0)[None, :]
+        s_ref[...] = jnp.where(active, S, 0.0)[None, :]
+        act_ref[...] = active.astype(jnp.float32)[None, :]
 
-    # exact payloads at the solved level
-    gt = y > mu[None, :]
-    k = jnp.maximum(jnp.sum(gt.astype(jnp.float32), axis=0), 1.0)
-    S = jnp.sum(jnp.where(gt, y, 0.0), axis=0)
-
-    mu_ref[...] = jnp.where(active, mu, 0.0)[None, :]
-    k_ref[...] = jnp.where(active, k, 1.0)[None, :]
-    s_ref[...] = jnp.where(active, S, 0.0)[None, :]
-    act_ref[...] = active.astype(jnp.float32)[None, :]
+    @pl.when(j >= nact_ref[0])
+    def _skip():
+        # Block lies past the compacted active prefix: every column is
+        # dominated, payloads are the inactive defaults. No solve runs, and
+        # the input index_maps alias these grid steps to block 0, so no
+        # fresh HBM traffic is pipelined in for them either.
+        mu_ref[...] = jnp.zeros(mu_ref.shape, mu_ref.dtype)
+        k_ref[...] = jnp.ones(k_ref.shape, k_ref.dtype)
+        s_ref[...] = jnp.zeros(s_ref.shape, s_ref.dtype)
+        act_ref[...] = jnp.zeros(act_ref.shape, act_ref.dtype)
 
 
 def mu_solve(Yabs: jnp.ndarray, theta: jnp.ndarray, *, block_m: int = 128,
-             n_bisect: int = 26, n_polish: int = 8, interpret: bool = False):
+             n_bisect: int = 26, n_polish: int = 8, interpret: bool = False,
+             nact_blocks=None):
     """Water level per column at removed mass theta. Yabs is (n, m) with
-    m % block_m == 0; the full column must fit one VMEM block."""
+    m % block_m == 0; the full column must fit one VMEM block.
+
+    theta: scalar (one ball) or (m,) vector (per-column, for packed
+    multi-segment buffers). nact_blocks: optional traced count of leading
+    column blocks that still contain active columns — grid programs at or
+    beyond it skip the solve, emit inactive payloads, AND have their input
+    DMA aliased to block 0 via scalar-prefetch index_maps, so both compute
+    and HBM traffic stay J-proportional (the shrinking engine's inner
+    pass). None means all blocks solve.
+    """
     n, m = Yabs.shape
-    grid = (m // block_m,)
-    theta = jnp.reshape(theta.astype(jnp.float32), (1, 1))
+    nblocks = m // block_m
+    theta = jnp.asarray(theta, jnp.float32)
+
+    def gated(j, nact):
+        return jnp.where(j < nact[0], j, 0)
+
+    if theta.ndim == 0:
+        theta = jnp.reshape(theta, (1, 1))
+        theta_spec = pl.BlockSpec((1, 1), lambda j, nact: (0, 0))
+    else:
+        theta = jnp.reshape(theta, (1, m))
+        theta_spec = pl.BlockSpec((1, block_m),
+                                  lambda j, nact: (0, gated(j, nact)))
+    if nact_blocks is None:
+        nact_blocks = nblocks
+    nact = jnp.reshape(jnp.asarray(nact_blocks, jnp.int32), (1,))
     kern = functools.partial(_mu_solve_kernel, n_bisect=n_bisect,
                              n_polish=n_polish)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nblocks,),
+        in_specs=[theta_spec,
+                  pl.BlockSpec((n, block_m),
+                               lambda j, nact: (0, gated(j, nact)))],
+        out_specs=[pl.BlockSpec((1, block_m), lambda j, nact: (0, j))] * 4,
+    )
     outs = pl.pallas_call(
         kern,
-        grid=grid,
-        in_specs=[pl.BlockSpec((1, 1), lambda j: (0, 0)),
-                  pl.BlockSpec((n, block_m), lambda j: (0, j))],
-        out_specs=[pl.BlockSpec((1, block_m), lambda j: (0, j))] * 4,
+        grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((1, m), jnp.float32)] * 4,
         interpret=interpret,
-    )(theta, Yabs)
+    )(nact, theta, Yabs)
     mu, k, S, act = (o[0] for o in outs)
     return mu, k, S, act > 0.5
 

@@ -48,6 +48,28 @@ def clip_apply_ref(Y: jnp.ndarray, mu: jnp.ndarray):
     return (jnp.sign(Y) * jnp.minimum(A, mu[None, :].astype(Y.dtype))).astype(Y.dtype)
 
 
+def project_l1inf_segmented_ref(Y, seg_ids, C_seg, num_segments: int):
+    """Packed multi-ball oracle: per-segment loop over the plain projection.
+
+    Semantics contract for the packed engines: each segment's columns are
+    projected onto that segment's ball independently; padding columns
+    (seg_ids == num_segments) pass through unchanged. Python loop — test
+    oracle only.
+    """
+    import numpy as np
+    Y = np.asarray(Y, np.float32)
+    seg_ids = np.asarray(seg_ids)
+    C_seg = np.asarray(C_seg, np.float32)
+    X = Y.copy()
+    for g in range(num_segments):
+        cols = np.nonzero(seg_ids == g)[0]
+        if cols.size == 0:
+            continue
+        Xg = project_l1inf_ref(jnp.asarray(Y[:, cols]), float(C_seg[g]))
+        X[:, cols] = np.asarray(Xg)
+    return X
+
+
 def project_l1inf_ref(Y: jnp.ndarray, C) -> jnp.ndarray:
     """Full exact projection oracle (per-column sort + scalar Newton)."""
     A = jnp.abs(Y.astype(jnp.float32))

@@ -26,7 +26,7 @@ from ..dist.sharding import default_rules, axis_rules, logical_spec, fit_spec
 from ..models.zoo import Model, SHAPES
 from ..models.transformer import ArchConfig
 from ..optim import AdamConfig, AdamState, adam_init, adam_update
-from ..core import apply_constraints
+from ..core import apply_constraints_packed
 
 
 # ---------------------------------------------------------------------------
@@ -126,9 +126,12 @@ def build_train_step(model: Model, mesh: Optional[Mesh], rules: dict,
                 model.loss, has_aux=True)(params, batch)
             new_params, new_opt = adam_update(grads, opt_state, params, acfg)
             if with_projection and cfg.projection_specs:
-                new_params = apply_constraints(new_params,
-                                               cfg.projection_specs,
-                                               step=new_opt.count)
+                # packed multi-tensor batching: one segmented solve per
+                # every_k group (cold-started — this step's signature is
+                # shared with lower_cell/dry-run shardings, so the theta
+                # warm-start state is threaded only in train/loop.py)
+                new_params, _ = apply_constraints_packed(
+                    new_params, cfg.projection_specs, step=new_opt.count)
         return loss, metrics, new_params, new_opt
 
     return train_step

@@ -17,8 +17,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import (ProjectionSpec, apply_constraints, column_masks,
-                    sparsity_report)
+from ..core import (ProjectionSpec, apply_constraints_packed, column_masks,
+                    init_projection_state, sparsity_report)
 from ..optim import AdamConfig, adam_init, adam_update
 from .model import SAEConfig, sae_init, sae_loss, accuracy
 
@@ -48,30 +48,34 @@ def _make_step(cfg: SAEConfig, tcfg: SAETrainConfig, acfg: AdamConfig):
     specs = (tcfg.projection,) if tcfg.projection else ()
 
     @jax.jit
-    def step(params, opt_state, x, y, mask):
+    def step(params, opt_state, proj_state, x, y, mask):
         (loss, aux), grads = jax.value_and_grad(
             lambda p: sae_loss(p, x, y, cfg), has_aux=True)(params)
         params, opt_state = adam_update(grads, opt_state, params, acfg,
                                         mask=mask)
         if specs:
-            params = apply_constraints(params, specs)
+            # packed projection; proj_state threads theta warm starts so
+            # steady-state solves converge in 1-2 Newton iterations
+            params, proj_state = apply_constraints_packed(
+                params, specs, state=proj_state)
             params = jax.tree_util.tree_map(lambda p, m: p * m, params, mask)
-        return params, opt_state, loss, aux
+        return params, opt_state, proj_state, loss, aux
 
-    return step
+    return step, specs
 
 
-def _run_descent(params, step_fn, X, y, tcfg, mask, rng):
+def _run_descent(params, step_fn, specs, X, y, tcfg, mask, rng):
     acfg = AdamConfig(lr=tcfg.lr)
     opt_state = adam_init(params, acfg)
+    proj_state = init_projection_state(params, specs) if specs else {}
     n = X.shape[0]
     history = []
     for epoch in range(tcfg.epochs):
         perm = rng.permutation(n)
         for s in range(0, n, tcfg.batch_size):
             idx = perm[s:s + tcfg.batch_size]
-            params, opt_state, loss, aux = step_fn(
-                params, opt_state, X[idx], y[idx], mask)
+            params, opt_state, proj_state, loss, aux = step_fn(
+                params, opt_state, proj_state, X[idx], y[idx], mask)
         history.append(float(loss))
     return params, history
 
@@ -102,11 +106,11 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
             tcfg.projection, norm="l1inf"))
     else:
         tcfg1 = tcfg
-    step_fn = _make_step(cfg, tcfg1, acfg)
+    step_fn, step_specs = _make_step(cfg, tcfg1, acfg)
 
     # ---- descent 1: projected training --------------------------------
-    params, hist1 = _run_descent(params0, step_fn, X_train, y_train_j,
-                                 tcfg, ones_mask, rng)
+    params, hist1 = _run_descent(params0, step_fn, step_specs, X_train,
+                                 y_train_j, tcfg, ones_mask, rng)
     history = [("descent1", hist1)]
 
     # ---- double descent: mask, rewind, retrain -------------------------
@@ -116,10 +120,10 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
         rewound = jax.tree_util.tree_map(lambda p0, m: p0 * m, params0, masks)
         if masked_mode:  # retrain mask-only, no clipping
             import dataclasses as _dc
-            step_fn = _make_step(cfg, _dc.replace(tcfg, projection=None),
-                                 acfg)
-        params, hist2 = _run_descent(rewound, step_fn, X_train, y_train_j,
-                                     tcfg, masks, rng)
+            step_fn, step_specs = _make_step(
+                cfg, _dc.replace(tcfg, projection=None), acfg)
+        params, hist2 = _run_descent(rewound, step_fn, step_specs, X_train,
+                                     y_train_j, tcfg, masks, rng)
         history.append(("descent2", hist2))
 
     test_acc = float(accuracy(params, jnp.asarray(X_test), jnp.asarray(y_test)))

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from ..models.zoo import Model
 from ..optim import AdamConfig, adam_init, adam_update
-from ..core import apply_constraints, sparsity_report
+from ..core import (apply_constraints_packed, init_projection_state,
+                    sparsity_report)
 from ..checkpoint import AsyncCheckpointer, latest_step, restore_tree
 from ..dist.sharding import axis_rules
 from ..dist.watchdog import StepWatchdog
@@ -47,7 +48,7 @@ def build_accum_step(model: Model, acfg: AdamConfig, tcfg: TrainConfig,
     def loss_fn(params, batch):
         return model.loss(params, batch)
 
-    def step(params, opt_state, batch, lr):
+    def step(params, opt_state, proj_state, batch, lr):
         with axis_rules(mesh, rules):
             if tcfg.microbatches > 1:
                 def micro(carry, mb):
@@ -73,11 +74,14 @@ def build_accum_step(model: Model, acfg: AdamConfig, tcfg: TrainConfig,
             params, opt_state = adam_update(grads, opt_state, params, acfg,
                                             lr=lr)
             if tcfg.with_projection and cfg.projection_specs:
-                params = apply_constraints(params, cfg.projection_specs,
-                                           step=opt_state.count)
-        return params, opt_state, loss
+                # packed multi-tensor batching: all l1inf leaves in one
+                # segmented solve, warm-started from last step's theta
+                params, proj_state = apply_constraints_packed(
+                    params, cfg.projection_specs, step=opt_state.count,
+                    state=proj_state)
+        return params, opt_state, proj_state, loss
 
-    return jax.jit(step, donate_argnums=(0, 1))
+    return jax.jit(step, donate_argnums=(0, 1, 2))
 
 
 def lr_at(tcfg: TrainConfig, step: int) -> float:
@@ -108,12 +112,18 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
     watchdog = StepWatchdog(on_straggler=lambda s, dt, ew: print(
         f"[watchdog] straggler step {s}: {dt:.3f}s vs EWMA {ew:.3f}s"))
 
+    # theta warm-start vectors for the packed projection (not checkpointed:
+    # a cold restart just pays a few extra Newton iterations on step 1)
+    proj_state = (init_projection_state(params, model.cfg.projection_specs)
+                  if tcfg.with_projection and model.cfg.projection_specs
+                  else {})
+
     losses = []
     for step in range(start_step, tcfg.steps):
         batch = jax.tree_util.tree_map(jnp.asarray, batcher.get(step))
         watchdog.start()
-        params, opt_state, loss = step_fn(params, opt_state, batch,
-                                          lr_at(tcfg, step))
+        params, opt_state, proj_state, loss = step_fn(
+            params, opt_state, proj_state, batch, lr_at(tcfg, step))
         loss_f = float(loss)
         dt = watchdog.stop(step)
         losses.append(loss_f)

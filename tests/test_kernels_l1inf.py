@@ -1,7 +1,10 @@
 """Pallas l1,inf kernels vs the pure-jnp oracle (interpret mode, CPU).
 
 Shape/dtype sweeps per kernel + full-projection equivalence against both the
-ref oracle and the faithful heap algorithm.
+ref oracle and the faithful heap algorithm, plus the sparsity-adaptive
+engine features: active-column shrinking, warm start, the packed segmented
+path, and adversarial shapes (non-multiples of the tile dims, n=1, m=1,
+tie-heavy inputs, inside-ball, bf16).
 """
 import numpy as np
 import pytest
@@ -10,8 +13,11 @@ import jax.numpy as jnp
 
 from repro.kernels.l1inf import ref
 from repro.kernels.l1inf.kernel import colstats, mu_solve, clip_apply
-from repro.kernels.l1inf.ops import project_l1inf_pallas
-from repro.core import project_l1inf_heap, project_l1inf_newton
+from repro.kernels.l1inf.ops import (project_l1inf_pallas,
+                                     project_l1inf_pallas_segmented,
+                                     _pick_block_n)
+from repro.core import (project_l1inf_heap, project_l1inf_newton,
+                        project_l1inf_sorted)
 
 
 @pytest.mark.parametrize("shape", [(8, 128), (512, 128), (1024, 256), (64, 384)])
@@ -87,6 +93,188 @@ def test_inside_ball_identity():
     C = 1e6
     X = project_l1inf_pallas(Y, C, interpret=True)
     np.testing.assert_array_equal(np.asarray(X), np.asarray(Y))
+
+
+def test_pick_block_n():
+    # largest divisor <= 512 that is a multiple of 8 — never the old
+    # silent 8-row fallback for awkward n_pad
+    assert _pick_block_n(512) == 512
+    assert _pick_block_n(8) == 8
+    assert _pick_block_n(1024) == 512
+    assert _pick_block_n(520) == 104     # old rule collapsed this to 8
+    assert _pick_block_n(136) == 136
+    assert _pick_block_n(8 * 127) == 8   # prime sublane count: 8 is correct
+    for n_pad in range(8, 2048, 8):
+        bn = _pick_block_n(n_pad)
+        assert n_pad % bn == 0 and bn % 8 == 0 and bn <= 512
+    with pytest.raises(ValueError):
+        _pick_block_n(12)
+
+
+# ----------------------------- adversarial shapes ---------------------------
+
+@pytest.mark.parametrize("shape", [
+    (1, 300),        # n=1: every column is its own max
+    (50, 1),         # m=1: simplex-style water filling
+    (1, 1),
+    (130, 257),      # non-multiples of 8 / 128
+    (520, 130),      # n_pad=520 exercises the block_n divisor fallback
+    (9, 129),        # one past the tile boundary in both dims
+])
+@pytest.mark.parametrize("Cfrac", [0.05, 0.6])
+def test_pallas_adversarial_shapes(shape, Cfrac):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    Y = rng.normal(size=shape)
+    C = float(Cfrac * np.abs(Y).max(axis=0).sum())
+    if C <= 0:
+        return
+    X = np.asarray(project_l1inf_pallas(jnp.asarray(Y, jnp.float32), C,
+                                        interpret=True))
+    Xh = project_l1inf_heap(Y, C)
+    Xs = np.asarray(project_l1inf_sorted(jnp.asarray(Y, jnp.float32), C))
+    scale = max(np.abs(Y).max(), 1.0)
+    np.testing.assert_allclose(X, Xh, atol=3e-4 * scale, rtol=3e-3)
+    np.testing.assert_allclose(X, Xs, atol=3e-4 * scale, rtol=3e-3)
+    assert np.abs(X).max(axis=0).sum() <= C * (1 + 1e-3) + 1e-6
+
+
+def test_pallas_tie_heavy():
+    """Many equal |Y| values straddling mu (degenerate breakpoints)."""
+    rng = np.random.default_rng(11)
+    Y = rng.choice([0.0, 1.0, -1.0, 2.0, 2.0], size=(40, 96))
+    norm = np.abs(Y).max(axis=0).sum()
+    for Cfrac in (0.1, 0.45, 0.9):
+        C = float(Cfrac * norm)
+        X = np.asarray(project_l1inf_pallas(jnp.asarray(Y, jnp.float32), C,
+                                            interpret=True))
+        Xh = project_l1inf_heap(Y, C)
+        np.testing.assert_allclose(X, Xh, atol=5e-4, rtol=3e-3)
+
+
+def test_pallas_inside_ball_and_bf16_adversarial():
+    rng = np.random.default_rng(12)
+    # inside-ball on a non-tile-aligned shape: exact identity
+    Y = jnp.asarray(rng.normal(size=(33, 77)) * 0.01, jnp.float32)
+    X = project_l1inf_pallas(Y, 1e5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(X), np.asarray(Y))
+    # bf16 on a ragged shape, vs the f32 newton reference
+    Yb = jnp.asarray(rng.normal(size=(37, 131)), jnp.bfloat16)
+    C = 8.0
+    Xb = project_l1inf_pallas(Yb, C, interpret=True)
+    assert Xb.dtype == jnp.bfloat16
+    Xn = project_l1inf_newton(jnp.asarray(Yb, jnp.float32), C)
+    np.testing.assert_allclose(np.asarray(Xb, np.float32), np.asarray(Xn),
+                               atol=3e-2, rtol=3e-2)
+    Xhb = project_l1inf_heap(np.asarray(Yb, np.float32), C)
+    np.testing.assert_allclose(np.asarray(Xb, np.float32), Xhb,
+                               atol=3e-2, rtol=3e-2)
+
+
+# ----------------------- sparsity-adaptive engine ---------------------------
+
+def test_shrink_matches_no_shrink():
+    """Active-column shrinking is a layout optimization: identical results
+    with the engine's compaction on or off, up to the fp accumulation-order
+    wobble of the permuted Eq.-(19) reductions."""
+    rng = np.random.default_rng(13)
+    scale = np.exp(rng.normal(size=(1, 300)))
+    Y = jnp.asarray(rng.normal(size=(60, 300)) * scale, jnp.float32)
+    for Cfrac in (0.02, 0.3):
+        C = float(Cfrac * np.abs(np.asarray(Y)).max(axis=0).sum())
+        X1 = np.asarray(project_l1inf_pallas(Y, C, interpret=True,
+                                             shrink=True))
+        X0 = np.asarray(project_l1inf_pallas(Y, C, interpret=True,
+                                             shrink=False))
+        tol = 1e-6 * float(np.abs(np.asarray(Y)).max())
+        np.testing.assert_allclose(X1, X0, atol=tol)
+        # and both agree with the heap oracle
+        Xh = project_l1inf_heap(np.asarray(Y, np.float64), C)
+        np.testing.assert_allclose(X1, Xh, atol=3e-4 * scale.max(), rtol=3e-3)
+
+
+def test_work_counter_j_proportional():
+    """The per-step work counter must shrink with column sparsity."""
+    rng = np.random.default_rng(14)
+    scale = np.exp(rng.normal(size=(1, 512)))
+    Y = jnp.asarray(rng.uniform(0, 1, size=(40, 512)) * scale, jnp.float32)
+    norm = float(np.abs(np.asarray(Y)).max(axis=0).sum())
+    X, st = project_l1inf_pallas(Y, 0.01 * norm, interpret=True,
+                                 return_stats=True)
+    _, st0 = project_l1inf_pallas(Y, 0.01 * norm, interpret=True,
+                                  shrink=False, return_stats=True)
+    colsp = float((np.abs(np.asarray(X)).max(axis=0) <= 1e-12).mean())
+    assert colsp > 0.5                       # high-sparsity regime
+    # strictly less work than the non-shrinking engine, and the final
+    # Newton step touches only the surviving prefix
+    assert int(st["work_cols"]) < int(st0["work_cols"])
+    assert int(st["active_cols_per_step"]) < int(st["full_cols"])
+
+
+def test_pallas_warm_start():
+    rng = np.random.default_rng(15)
+    Y = jnp.asarray(rng.normal(size=(48, 200)), jnp.float32)
+    C = float(0.2 * np.abs(np.asarray(Y)).max(axis=0).sum())
+    X, st = project_l1inf_pallas(Y, C, interpret=True, return_stats=True)
+    Xw, stw = project_l1inf_pallas(Y, C, theta0=st["theta"], interpret=True,
+                                   return_stats=True)
+    np.testing.assert_allclose(np.asarray(Xw), np.asarray(X), atol=1e-6)
+    # exact restart: the bootstrap pair (+ at most one fp-wobble step from
+    # the bisection-approximate payloads), well below a cold solve
+    assert int(stw["newton_iters"]) <= 3
+    assert int(stw["newton_iters"]) < int(st["newton_iters"])
+    # overshooting warm start is repaired, result unchanged
+    Xo = project_l1inf_pallas(Y, C, theta0=st["theta"] * 7.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(Xo), np.asarray(X), atol=1e-5)
+
+
+def test_pallas_segmented_vs_per_matrix():
+    rng = np.random.default_rng(16)
+    sizes = [(40, 50), (64, 130), (24, 33)]
+    n_max = max(n for n, _ in sizes)
+    cols, sids, Cs, mats = [], [], [], []
+    for g, (n, m) in enumerate(sizes):
+        Yg = rng.normal(size=(n, m)) * rng.choice([0.3, 1.0, 4.0])
+        pad = np.zeros((n_max, m), np.float32)
+        pad[:n] = Yg
+        cols.append(pad)
+        sids += [g] * m
+        Cs.append(float(0.2 * np.abs(Yg).max(axis=0).sum()))
+        mats.append(Yg)
+    Yp = jnp.asarray(np.concatenate(cols, axis=1))
+    sids = jnp.asarray(np.array(sids, np.int32))
+    X, theta = project_l1inf_pallas_segmented(
+        Yp, sids, jnp.asarray(np.array(Cs, np.float32)), num_segments=3,
+        interpret=True)
+    Xref = ref.project_l1inf_segmented_ref(np.asarray(Yp), np.asarray(sids),
+                                           np.array(Cs, np.float32), 3)
+    np.testing.assert_allclose(np.asarray(X), Xref, atol=3e-4, rtol=3e-3)
+    # segment thetas match the scalar engine's
+    for g, (n, m) in enumerate(sizes):
+        Xh = project_l1inf_heap(mats[g], Cs[g])
+        cols_g = np.asarray(sids) == g
+        np.testing.assert_allclose(np.asarray(X)[:n, cols_g], Xh,
+                                   atol=3e-4, rtol=3e-3)
+
+
+def test_mu_solve_vector_theta_and_nact():
+    rng = np.random.default_rng(17)
+    Y = jnp.asarray(rng.uniform(0, 1, size=(64, 256)), jnp.float32)
+    colsum = jnp.sum(Y, axis=0)
+    th_scalar = jnp.asarray(0.3 * float(jnp.median(colsum)), jnp.float32)
+    mu_s, k_s, S_s, a_s = mu_solve(Y, th_scalar, block_m=128, interpret=True)
+    # vector theta equal everywhere == scalar theta
+    th_vec = jnp.full((256,), th_scalar, jnp.float32)
+    mu_v, k_v, S_v, a_v = mu_solve(Y, th_vec, block_m=128, interpret=True)
+    np.testing.assert_array_equal(np.asarray(mu_s), np.asarray(mu_v))
+    np.testing.assert_array_equal(np.asarray(k_s), np.asarray(k_v))
+    # nact_blocks=1: second block (cols 128+) emits inactive defaults
+    mu_1, k_1, S_1, a_1 = mu_solve(Y, th_scalar, block_m=128, interpret=True,
+                                   nact_blocks=jnp.asarray(1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(mu_1)[:128],
+                                  np.asarray(mu_s)[:128])
+    assert not np.asarray(a_1)[128:].any()
+    assert (np.asarray(mu_1)[128:] == 0).all()
+    assert (np.asarray(k_1)[128:] == 1).all()
 
 
 def test_ref_oracle_matches_heap():

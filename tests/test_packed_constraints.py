@@ -1,0 +1,193 @@
+"""Packed multi-tensor constraint batching vs the per-leaf reference path.
+
+The packed engine must be exact (up to fp accumulation order) against
+per-matrix projection on every leaf shape: 2-D, stacked 3-D, transposed
+axis, mixed radii, mixed norms (unpackable ones fall back), every_k gating,
+and warm-start state threading — plus the train-loop integrations.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ProjectionSpec, apply_constraints,
+                        apply_constraints_packed, build_packed_plans,
+                        init_projection_state, project_l1inf_newton,
+                        project_l1inf_segmented)
+from repro.core import constraints as constraints_mod
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "enc1": {"w": jnp.asarray(rng.normal(size=(24, 50)), jnp.float32)},
+        "blocks": {"mlp_w1": jnp.asarray(rng.normal(size=(3, 16, 40)),
+                                         jnp.float32)},
+        "dec": {"w": jnp.asarray(rng.normal(size=(50, 24)), jnp.bfloat16)},
+        "bias": jnp.asarray(rng.normal(size=(50,)), jnp.float32),
+        "other": {"v": jnp.asarray(rng.normal(size=(12, 12)), jnp.float32)},
+    }
+
+
+SPECS = (
+    ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0, axis=1),
+    ProjectionSpec(pattern=r"mlp_w1", norm="l1inf", radius=1.5, axis=0),
+    ProjectionSpec(pattern=r"dec/w", norm="l1inf_sorted", radius=3.0, axis=0),
+    ProjectionSpec(pattern=r"other/v", norm="l12", radius=1.0, axis=0),
+)
+
+
+def _tol_equal(a, b, tol=5e-6):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol, rtol=tol)
+
+
+def test_packed_matches_per_leaf():
+    params = _params()
+    ref = apply_constraints(params, SPECS)
+    out, state = apply_constraints_packed(params, SPECS)
+    for tree_ref, tree_out in [(ref, out)]:
+        flat_r = jax.tree_util.tree_leaves(tree_ref)
+        flat_o = jax.tree_util.tree_leaves(tree_out)
+        for r, o in zip(flat_r, flat_o):
+            _tol_equal(r, o)
+    # dtype preserved per leaf
+    assert out["dec"]["w"].dtype == jnp.bfloat16
+    # one plan, 1 + 3 + 1 = 5 segments (stacked leaf contributes 3)
+    plans, per_leaf = build_packed_plans(params, SPECS)
+    assert len(plans) == 1 and plans[0].num_segments == 5
+    assert len(per_leaf) == 1            # the l12 leaf falls back
+    assert set(state) == {plans[0].key}
+    assert state[plans[0].key].shape == (5,)
+
+
+def test_packed_single_launch_per_step():
+    params = _params(1)
+    before = dict(constraints_mod.ENGINE_INVOCATIONS)
+    apply_constraints_packed(params, SPECS)
+    after = dict(constraints_mod.ENGINE_INVOCATIONS)
+    # 3 packable leaves -> ONE packed engine invocation (+1 l12 fallback)
+    assert after["packed"] - before["packed"] == 1
+    assert after["per_leaf"] - before["per_leaf"] == 1
+    before = dict(constraints_mod.ENGINE_INVOCATIONS)
+    apply_constraints(params, SPECS)
+    after = dict(constraints_mod.ENGINE_INVOCATIONS)
+    assert after["per_leaf"] - before["per_leaf"] == 4
+
+
+def test_packed_warm_start_state_threading():
+    params = _params(2)
+    state0 = init_projection_state(params, SPECS)
+    out1, st1 = apply_constraints_packed(params, SPECS, state=state0)
+    out2, st2 = apply_constraints_packed(params, SPECS, state=st1)
+    for r, o in zip(jax.tree_util.tree_leaves(out1),
+                    jax.tree_util.tree_leaves(out2)):
+        _tol_equal(r, o)
+    # projecting the same params again: theta state is a fixed point
+    k = list(st1)[0]
+    np.testing.assert_allclose(np.asarray(st1[k]), np.asarray(st2[k]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_packed_every_k_gating():
+    params = _params(3)
+    specs = (ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0,
+                            axis=1, every_k=2),)
+    state0 = init_projection_state(params, specs)
+    # step 1: skipped -> identity, theta state keeps its previous value
+    out, st = apply_constraints_packed(params, specs,
+                                       step=jnp.asarray(1), state=state0)
+    np.testing.assert_array_equal(np.asarray(out["enc1"]["w"]),
+                                  np.asarray(params["enc1"]["w"]))
+    k = list(st)[0]
+    np.testing.assert_array_equal(np.asarray(st[k]), np.asarray(state0[k]))
+    # step 2: applied
+    out, st = apply_constraints_packed(params, specs,
+                                       step=jnp.asarray(2), state=state0)
+    ref = apply_constraints(params, specs)
+    _tol_equal(ref["enc1"]["w"], out["enc1"]["w"])
+    assert float(st[k][0]) > 0
+
+
+def test_packed_under_jit_and_grouping_by_every_k():
+    params = _params(4)
+    specs = (ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0),
+             ProjectionSpec(pattern=r"mlp_w1", norm="l1inf", radius=1.0,
+                            every_k=3))
+    plans, _ = build_packed_plans(params, specs)
+    assert len(plans) == 2               # grouped by every_k
+    state0 = init_projection_state(params, specs)
+    f = jax.jit(lambda p, s: apply_constraints_packed(
+        p, specs, step=jnp.asarray(3), state=s))
+    out, st = f(params, state0)
+    ref = apply_constraints(params, specs, step=jnp.asarray(3))
+    _tol_equal(ref["enc1"]["w"], out["enc1"]["w"])
+    _tol_equal(ref["blocks"]["mlp_w1"], out["blocks"]["mlp_w1"])
+
+
+def test_packed_pallas_engine_matches():
+    params = _params(5)
+    specs = (ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0,
+                            axis=1),
+             ProjectionSpec(pattern=r"mlp_w1", norm="l1inf", radius=1.5))
+    ref, _ = apply_constraints_packed(params, specs, engine="newton")
+    out, _ = apply_constraints_packed(params, specs, engine="pallas")
+    _tol_equal(ref["enc1"]["w"], out["enc1"]["w"], tol=5e-4)
+    _tol_equal(ref["blocks"]["mlp_w1"], out["blocks"]["mlp_w1"], tol=5e-4)
+
+
+def test_segmented_radius_heterogeneous():
+    """Segments with very different radii in one packed solve."""
+    rng = np.random.default_rng(6)
+    Y1 = rng.normal(size=(20, 30))
+    Y2 = rng.normal(size=(20, 18)) * 5.0
+    Yp = jnp.asarray(np.concatenate([Y1, Y2], axis=1), jnp.float32)
+    sids = jnp.asarray(np.array([0] * 30 + [1] * 18, np.int32))
+    C1 = float(0.05 * np.abs(Y1).max(axis=0).sum())
+    C2 = float(0.7 * np.abs(Y2).max(axis=0).sum())
+    X, theta, iters = project_l1inf_segmented(
+        Yp, sids, jnp.asarray([C1, C2], jnp.float32), num_segments=2)
+    X1 = project_l1inf_newton(jnp.asarray(Y1, jnp.float32), C1)
+    X2 = project_l1inf_newton(jnp.asarray(Y2, jnp.float32), C2)
+    _tol_equal(np.asarray(X)[:, :30], X1)
+    _tol_equal(np.asarray(X)[:, 30:], X2)
+    # per-segment warm start: exact restart converges in the bootstrap pair
+    _, _, it2 = project_l1inf_segmented(
+        Yp, sids, jnp.asarray([C1, C2], jnp.float32), num_segments=2,
+        theta0=theta)
+    assert int(it2) <= 2
+
+
+def test_segmented_inside_and_padding_columns():
+    rng = np.random.default_rng(8)
+    Y1 = rng.normal(size=(10, 12)) * 0.01   # inside its ball
+    Y2 = rng.normal(size=(10, 9))
+    pad = np.zeros((10, 3))
+    Yp = jnp.asarray(np.concatenate([Y1, Y2, pad], axis=1), jnp.float32)
+    sids = jnp.asarray(np.array([0] * 12 + [1] * 9 + [2] * 3, np.int32))
+    C2 = float(0.3 * np.abs(Y2).max(axis=0).sum())
+    X, theta, _ = project_l1inf_segmented(
+        Yp, sids, jnp.asarray([100.0, C2], jnp.float32), num_segments=2)
+    np.testing.assert_array_equal(np.asarray(X)[:, :12], np.asarray(Y1, np.float32))
+    assert float(theta[0]) == 0.0
+    X2 = project_l1inf_newton(jnp.asarray(Y2, jnp.float32), C2)
+    _tol_equal(np.asarray(X)[:, 12:21], X2)
+    np.testing.assert_array_equal(np.asarray(X)[:, 21:], 0.0)
+
+
+def test_train_loop_packed_integration():
+    """train/loop.py threads proj_state through the jitted step end-to-end."""
+    from repro.configs import get_reduced
+    from repro.models.zoo import build
+    from repro.train.loop import TrainConfig, train
+    from repro.data.pipeline import SyntheticLM, LMBatcher
+
+    cfg = get_reduced("stablelm_3b")
+    assert cfg.projection_specs, "reduced config should carry l1inf specs"
+    model = build(cfg)
+    batcher = LMBatcher(SyntheticLM(cfg.vocab, seed=1), 2, 16)
+    out = train(model, batcher,
+                TrainConfig(steps=3, log_every=100, with_projection=True),
+                resume=False)
+    assert all(np.isfinite(l) for l in out["losses"])
+    assert out["sparsity"], "projection specs matched no parameters"

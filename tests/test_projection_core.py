@@ -12,7 +12,9 @@ import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    l1inf_norm, project_l1inf_sorted, project_l1inf_newton, theta_l1inf,
+    l1inf_norm, project_l1inf_sorted, project_l1inf_newton,
+    project_l1inf_newton_stats, project_l1inf_segmented, theta_l1inf,
+    active_compaction,
     project_l1inf_heap, project_l1inf_naive, theta_l1inf_heap,
     project_l1inf_quattoni, project_l1inf_bejar, project_l1inf_newton_np,
     project_l1inf_masked, l1inf_column_mask,
@@ -193,6 +195,134 @@ def test_moreau_identity():
     # here check the prox shrinks the dual norm
     from repro.core import linf1_norm
     assert float(linf1_norm(p)) <= float(linf1_norm(Y)) + 1e-5
+
+
+def test_theta_nonpositive_radius_regression():
+    """C <= 0: theta must be the norm-removal threshold max_j ||y_j||_1
+    (consistent with project_l1inf_*'s C > 0 gating returning zeros), not a
+    degenerate Newton iterate."""
+    rng = np.random.default_rng(21)
+    Y = jnp.asarray(rng.normal(size=(12, 17)), jnp.float32)
+    want = float(jnp.max(jnp.sum(jnp.abs(Y), axis=0)))
+    for C in (0.0, -1.0, -100.0):
+        got = float(theta_l1inf(Y, C))
+        assert abs(got - want) <= 1e-4 * want, (C, got, want)
+        X = np.asarray(project_l1inf_newton(Y, C))
+        np.testing.assert_array_equal(X, np.zeros_like(X))
+    # sanity: positive radius unaffected
+    assert float(theta_l1inf(Y, 1.0)) < want
+
+
+def test_newton_warm_start():
+    """theta0 warm start: any value >= 0 gives the identical projection;
+    an exact restart converges in the two bootstrap evaluations."""
+    rng = np.random.default_rng(22)
+    Y = jnp.asarray(rng.normal(size=(30, 60)), jnp.float32)
+    C = float(0.2 * _norm(np.asarray(Y)))
+    X, st = project_l1inf_newton_stats(Y, C)
+    for th0 in (0.0, float(st["theta"]) / 3, float(st["theta"]),
+                float(st["theta"]) * 5, 1e6):
+        Xw, stw = project_l1inf_newton_stats(Y, C, theta0=jnp.float32(th0))
+        np.testing.assert_allclose(np.asarray(Xw), np.asarray(X), atol=1e-6)
+    _, st_exact = project_l1inf_newton_stats(Y, C, theta0=st["theta"])
+    assert int(st_exact["iters"]) == 2
+    assert int(st["iters"]) > 2
+
+
+def test_newton_warm_start_sgd_sequence():
+    """Steady-state SGD: warm-started solves use (far) fewer Eq.-(19)
+    evaluations than cold ones."""
+    rng = np.random.default_rng(23)
+    Y = np.asarray(rng.normal(size=(40, 80)), np.float32)
+    C = float(0.15 * _norm(Y))
+    theta = None
+    warm, cold = [], []
+    for t in range(6):
+        Yj = jnp.asarray(Y, jnp.float32)
+        _, st_c = project_l1inf_newton_stats(Yj, C)
+        X, st_w = (project_l1inf_newton_stats(Yj, C) if theta is None else
+                   project_l1inf_newton_stats(Yj, C, theta0=theta))
+        cold.append(int(st_c["iters"]))
+        warm.append(int(st_w["iters"]))
+        theta = st_w["theta"]
+        Y = np.asarray(X) + 1e-5 * rng.normal(size=Y.shape).astype(np.float32)
+    assert sum(warm[2:]) < sum(cold[2:]), (warm, cold)
+
+
+def test_max_iter_cap_keeps_theta_mu_consistent():
+    """When the iteration cap cuts the ascent short, the returned X must be
+    the clip at the water level of the RETURNED theta (not one iterate
+    behind), and the cap must never make things worse than fewer
+    iterations."""
+    from repro.core.l1inf import _sorted_stats, _theta_state
+    rng = np.random.default_rng(25)
+    scale = np.exp(2 * rng.normal(size=(1, 512)))
+    Y = jnp.asarray(rng.uniform(0, 1, size=(32, 512)) * scale, jnp.float32)
+    C = float(0.001 * _norm(np.asarray(Y)))
+    prev_norm = np.inf
+    for cap in (3, 4, 6, 32):
+        X, st = project_l1inf_newton_stats(Y, C, max_iter=cap)
+        A = jnp.abs(Y)
+        Z, S, b = _sorted_stats(A)
+        k, S_k, act = _theta_state(S, b, st["theta"])
+        mu = np.asarray(jnp.where(act, jnp.maximum(
+            (S_k - st["theta"]) / k, 0.0), 0.0))
+        mu_X = np.abs(np.asarray(X)).max(axis=0)
+        clipped = mu < np.asarray(A).max(axis=0)
+        np.testing.assert_allclose(mu_X[clipped], mu[clipped], atol=1e-6)
+        norm = float(_norm(np.asarray(X)))
+        assert norm <= prev_norm * (1 + 1e-6)   # monotone toward the ball
+        prev_norm = norm
+    np.testing.assert_allclose(prev_norm, C, rtol=1e-4)  # converged at 32
+
+
+def test_active_compaction_roundtrip():
+    rng = np.random.default_rng(24)
+    mask = jnp.asarray(rng.random(37) < 0.4)
+    perm, num = active_compaction(mask)
+    perm = np.asarray(perm)
+    assert int(num) == int(np.asarray(mask).sum())
+    # active columns occupy the leading slots; scatter-back is exact
+    assert np.asarray(mask)[perm][: int(num)].all()
+    assert not np.asarray(mask)[perm][int(num):].any()
+    x = rng.normal(size=37)
+    packed = x[perm]
+    out = np.zeros(37)
+    out[perm] = packed
+    np.testing.assert_array_equal(out, x)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_segmented_matches_per_matrix(seed):
+    """Packed segmented solve == per-matrix solve on every segment."""
+    rng = np.random.default_rng(100 + seed)
+    sizes = [(rng.integers(1, 30), rng.integers(1, 25)) for _ in range(4)]
+    n_max = max(n for n, _ in sizes)
+    cols, sids, Cs, mats = [], [], [], []
+    for g, (n, m) in enumerate(sizes):
+        Yg = rng.normal(size=(n, m)) * float(rng.choice([0.1, 1.0, 10.0]))
+        nrm = _norm(Yg)
+        pad = np.zeros((n_max, m), np.float32)
+        pad[:n] = Yg
+        cols.append(pad)
+        sids += [g] * int(m)
+        Cs.append(float(max(rng.uniform(0.05, 1.2) * nrm, 1e-3)))
+        mats.append(Yg)
+    Yp = jnp.asarray(np.concatenate(cols, axis=1))
+    sids = np.array(sids, np.int32)
+    X, theta, iters = project_l1inf_segmented(
+        Yp, jnp.asarray(sids), jnp.asarray(np.array(Cs, np.float32)),
+        num_segments=4)
+    X = np.asarray(X)
+    for g, (n, m) in enumerate(sizes):
+        Xg = np.asarray(project_l1inf_newton(
+            jnp.asarray(mats[g], jnp.float32), Cs[g]))
+        scale = max(np.abs(mats[g]).max(), 1.0)
+        np.testing.assert_allclose(X[:n, sids == g], Xg,
+                                   atol=5e-5 * scale, rtol=1e-4,
+                                   err_msg=f"segment {g}")
+        # zero row padding projects to zero
+        np.testing.assert_allclose(X[n:, sids == g], 0.0, atol=1e-7 * scale)
 
 
 # ------------------------------ simplex / l1 -------------------------------
