@@ -19,10 +19,10 @@ from repro.core import (project_l1inf_heap, project_l1inf_naive,
                         project_l1inf_newton_np, project_l1inf_newton,
                         project_l1inf_sorted)
 from repro.core.l1inf import project_l1inf_newton_stats
-from repro.core import constraints as _constraints
 from repro.core.constraints import (ProjectionSpec, apply_constraints,
-                                    apply_constraints_packed,
-                                    init_projection_state)
+                                    engine_counters, engine_counters_reset)
+from repro.core.engine import (apply_constraints_packed,
+                               init_projection_state)
 from repro.kernels.l1inf import project_l1inf_pallas
 
 Row = Tuple[str, float, str]
@@ -241,10 +241,10 @@ def engine_report(quick: bool = True,
     specs = (ProjectionSpec(pattern=r"w\d", norm="l1inf", radius=1.0),)
     state0 = init_projection_state(pm, specs)
 
-    before = dict(_constraints.ENGINE_INVOCATIONS)
+    engine_counters_reset()
     ref = apply_constraints(pm, specs)
     packed, _ = apply_constraints_packed(pm, specs, state=state0)
-    after = dict(_constraints.ENGINE_INVOCATIONS)
+    counts = engine_counters()
     max_diff = max(float(jnp.max(jnp.abs(ref[k] - packed[k]))) for k in pm)
 
     per_fn = jax.jit(lambda p: apply_constraints(p, specs))
@@ -263,8 +263,9 @@ def engine_report(quick: bool = True,
         lambda: jax.block_until_ready(packed_fn(pm, state1)), reps)
     payload["packed"] = {
         "matrices": len(pm),
-        "launches_per_step_per_matrix": after["per_leaf"] - before["per_leaf"],
-        "launches_per_step_packed": after["packed"] - before["packed"],
+        "launches_per_step_per_matrix": counts.get("per_leaf", 0),
+        "launches_per_step_packed": sum(
+            v for k, v in counts.items() if k != "per_leaf"),
         "max_abs_diff": max_diff,
         "per_matrix_us": per_us,
         "packed_cold_us": packed_cold_us,
@@ -277,6 +278,44 @@ def engine_report(quick: bool = True,
 
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
+    return rows
+
+
+def dist_engine_report(quick: bool = True,
+                       out_path: str = "BENCH_dist_proj.json") -> List[Row]:
+    """Sharded-vs-replicated packed projection on an 8-way host-device mesh.
+
+    Runs ``benchmarks.dist_proj_bench`` in a subprocess (the device count
+    must be set before jax initializes; the parent stays 1-device), loads
+    the JSON it writes, and reports the headline rows. CI uploads
+    ``out_path`` and ``scripts/check.sh --bench-smoke`` gates on it.
+    """
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    cmd = [sys.executable, "-m", "benchmarks.dist_proj_bench",
+           "--out", out_path] + (["--quick"] if quick else [])
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"dist_proj_bench failed (exit {proc.returncode}):\n"
+            f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    with open(out_path) as f:
+        d = json.load(f)
+    rows: List[Row] = [
+        ("dist/replicated", d["replicated_us"],
+         f"devices={d['meta']['devices']};"
+         f"allgather={d['collectives']['replicated']['all-gather']}"),
+        ("dist/sharded", d["sharded_us"],
+         f"ratio={d['ratio_sharded_vs_replicated']:.2f};"
+         f"allgather={d['collectives']['sharded']['all-gather']};"
+         f"max_diff={d['max_abs_diff']:.2e}"),
+    ]
     return rows
 
 

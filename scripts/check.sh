@@ -5,9 +5,12 @@
 #   scripts/check.sh --fast        # skip the slow subprocess multi-device tests
 #   scripts/check.sh --bench-smoke # quick projection-engine benchmark gate:
 #                                  # runs benchmarks/run.py --quick, emits
-#                                  # BENCH_proj.json (CI uploads it as an
-#                                  # artifact), fails if the packed-batch
-#                                  # path is >1.15x slower than per-matrix
+#                                  # BENCH_proj.json + BENCH_dist_proj.json
+#                                  # (CI uploads both as artifacts), fails if
+#                                  # the packed-batch path is >1.15x slower
+#                                  # than per-matrix or the sharded engine is
+#                                  # >1.15x the replicated solve on the
+#                                  # 8-way host-device mesh
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,8 +18,12 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
-    echo "== bench smoke: projection engine =="
-    python -m benchmarks.run --quick --only proj_engine
+    echo "== bench smoke: projection engine (local + sharded) =="
+    # benchmarks.run swallows per-bench failures (prints an ERROR row,
+    # exits 0); removing the artifacts first guarantees the gate below
+    # reads THIS run's numbers or fails loudly — never stale files
+    rm -f BENCH_proj.json BENCH_dist_proj.json
+    python -m benchmarks.run --quick --only proj_
     python - <<'PYEOF'
 import json
 d = json.load(open("BENCH_proj.json"))
@@ -31,6 +38,18 @@ assert diff <= 1e-4, f"packed != per-matrix (max abs diff {diff:.3e})"
 assert warm <= 3, f"steady-state warm Newton steps {warm} > 3"
 print(f"bench smoke OK: packed/per-matrix {ratio:.2f}x, "
       f"steady-state warm Newton steps {warm}, packed max diff {diff:.2e}")
+
+dd = json.load(open("BENCH_dist_proj.json"))
+dratio = dd["ratio_sharded_vs_replicated"]
+ddiff = dd["max_abs_diff"]
+ag = dd["collectives"]["sharded"]["all-gather"]
+# measured ~0.3x on the 8-way host mesh; gate at 1.15 for platform headroom
+assert dratio <= 1.15, (
+    f"sharded engine is {dratio:.2f}x the replicated solve (>1.15x gate)")
+assert ddiff <= 1e-4, f"sharded != replicated (max abs diff {ddiff:.3e})"
+assert ag == 0, f"sharded projection HLO contains {ag} all-gather(s)"
+print(f"dist bench smoke OK: sharded/replicated {dratio:.2f}x, "
+      f"0 all-gathers, max diff {ddiff:.2e}")
 PYEOF
     exit 0
 fi

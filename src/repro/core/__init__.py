@@ -10,16 +10,21 @@ Public API:
     prox_linf1               — prox of the dual norm via Moreau (Eq. 16)
     project_l1_ball / project_l12_ball / project_simplex_sort
     project_l1inf_segmented  — packed multi-ball solve (one sweep per group)
+    project_l1inf_segmented_sharded — shard_map twin (psum per iteration)
     ProjectionSpec / apply_constraints / column_masks — training integration
-    apply_constraints_packed / init_projection_state  — packed batching with
-        warm-started Newton (theta state threaded through the train step)
+    ProjectionEngine         — plan building + theta state + solver dispatch
+        (newton | pallas | sharded) + the projected_update step core every
+        train loop builds on
+    apply_constraints_packed / init_projection_state  — functional shims
+        over the engine (packed batching with warm-started Newton)
+    engine_counters / engine_counters_reset — solver-invocation accounting
 """
 from .simplex import (project_simplex_sort, project_l1_ball,
                       project_weighted_l1_ball, simplex_threshold)
 from .l1inf import (l1inf_norm, project_l1inf, project_l1inf_sorted,
                     project_l1inf_newton, project_l1inf_newton_stats,
-                    project_l1inf_segmented, theta_l1inf, column_support,
-                    active_compaction)
+                    project_l1inf_segmented, project_l1inf_segmented_sharded,
+                    theta_l1inf, column_support, active_compaction)
 from .heap import project_l1inf_heap, project_l1inf_naive, theta_l1inf_heap
 from .baselines import (project_l1inf_quattoni, project_l1inf_bejar,
                         project_l1inf_newton_np)
@@ -27,6 +32,8 @@ from .norms import project_l12_ball, prox_linf1, linf1_norm, l12_norm
 from .masked import project_l1inf_masked, l1inf_column_mask
 from .weighted import project_l1inf_weighted, l1inf_weighted_norm
 from .constraints import (ProjectionSpec, apply_constraints,
-                          apply_constraints_packed, init_projection_state,
                           build_packed_plans, column_masks, apply_masks,
-                          sparsity_report)
+                          sparsity_report, engine_counters,
+                          engine_counters_reset)
+from .engine import (ProjectionEngine, apply_constraints_packed,
+                     init_projection_state)

@@ -6,16 +6,22 @@ the paper's Algorithm 3). Leaves with more than 2 dims (scan-stacked layers,
 stacked experts) are vmapped over their leading dims so the constraint applies
 per layer / per expert.
 
-Packed multi-tensor batching (``apply_constraints_packed``): instead of one
-projection launch per matching weight matrix, every l1,inf-family leaf is
-canonicalized (max axis -> 0), lane-padded, and concatenated into ONE
-(n_max, sum m) buffer with a per-column segment id; a stacked (L, n, m) leaf
-contributes L segments, so the packing subsumes the per-layer vmap. The
-whole group is projected by ``project_l1inf_segmented`` in a single fused
-sweep — one compile, one launch, one HBM pass per train step — and unpacked
-exactly (slicing off padding). Per-segment radii ride in a C vector, so
-specs with different radii still share one launch. A per-plan theta vector
-threads through the train state as next step's Newton warm start.
+Packed multi-tensor batching: instead of one projection launch per matching
+weight matrix, every l1,inf-family leaf is canonicalized (max axis -> 0),
+lane-padded, and concatenated into ONE (n_max, sum m) buffer with a
+per-column segment id; a stacked (L, n, m) leaf contributes L segments, so
+the packing subsumes the per-layer vmap. The whole group is projected by
+``project_l1inf_segmented`` in a single fused sweep — one compile, one
+launch, one HBM pass per train step — and unpacked exactly (slicing off
+padding). Per-segment radii ride in a C vector, so specs with different
+radii still share one launch. A per-plan theta vector threads through the
+train state as next step's Newton warm start.
+
+This module owns the STATIC side of that story — specs, leaf matching, plan
+building, pack/unpack, masks/reports, and the invocation counters. The
+runtime side (solver dispatch newton|pallas|sharded, theta state, the
+shared projected-update step core) lives in ``core.engine``; the
+mesh-resident distributed solve lives in ``dist.projection``.
 
 This module is what makes the paper's technique a first-class framework
 feature: every arch config carries a tuple of specs (see configs/*.py).
@@ -30,14 +36,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .l1inf import (project_l1inf_newton, project_l1inf_sorted,
-                    project_l1inf_segmented)
+from .l1inf import project_l1inf_newton, project_l1inf_sorted
 from .masked import project_l1inf_masked
 from .norms import project_l1_ball, project_l12_ball
 
-__all__ = ["ProjectionSpec", "apply_constraints", "apply_constraints_packed",
-           "init_projection_state", "build_packed_plans", "column_masks",
-           "apply_masks", "sparsity_report", "leaf_path_str"]
+__all__ = ["ProjectionSpec", "apply_constraints", "build_packed_plans",
+           "column_masks", "apply_masks", "sparsity_report", "leaf_path_str",
+           "engine_count", "engine_counters", "engine_counters_reset"]
 
 _NORMS = {"l1inf", "l1inf_sorted", "l1inf_masked", "l1", "l12"}
 # Norms that project onto the l1,inf ball itself and can share one packed
@@ -47,11 +52,29 @@ _PACKABLE = {"l1inf", "l1inf_sorted"}
 _LANE = 128   # TPU lane width: per-matrix column padding unit
 _SUBLANE = 8  # TPU sublane: packed-buffer row padding unit
 
-# Python-level projection-engine invocation counter, keyed by path
-# ("per_leaf" | "packed"). Incremented once per solver call issued while
-# tracing/executing eagerly — benchmarks use it to demonstrate the
-# one-launch-per-step property of the packed path.
-ENGINE_INVOCATIONS = {"per_leaf": 0, "packed": 0}
+# Python-level projection-engine invocation counters, keyed by
+# "<plan key>/<solver>" for packed launches and "per_leaf" for the per-matrix
+# fallback. Incremented once per solver call issued while tracing/executing
+# eagerly — benchmarks and tests use them to demonstrate the
+# one-launch-per-step property of the packed path. Unlike the old
+# ENGINE_INVOCATIONS module dict, the registry is snapshot/reset-able so
+# concurrent benchmarks and tests cannot bleed counts into each other.
+_COUNTERS: Dict[str, int] = {}
+
+
+def engine_count(key: str) -> None:
+    """Increment one invocation counter (engine-internal)."""
+    _COUNTERS[key] = _COUNTERS.get(key, 0) + 1
+
+
+def engine_counters() -> Dict[str, int]:
+    """Snapshot of all per-plan/per-path invocation counters."""
+    return dict(_COUNTERS)
+
+
+def engine_counters_reset() -> None:
+    """Zero every counter (call before a measured region)."""
+    _COUNTERS.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -145,7 +168,7 @@ def apply_constraints(params: Any, specs: Sequence[ProjectionSpec],
         spec = _first_match(specs, leaf_path_str(path), leaf)
         out = leaf
         if spec is not None:
-            ENGINE_INVOCATIONS["per_leaf"] += 1
+            engine_count("per_leaf")
             fn = _project_fn(spec.norm)
             projected = _apply_2d(fn, out, spec.radius, spec.axis)
             out = _gated(projected, out, step, spec.every_k)
@@ -259,74 +282,12 @@ def _unpack_entry(block: jnp.ndarray, e: _PackedEntry,
     return x2.reshape(like.shape).astype(like.dtype)
 
 
-def init_projection_state(params: Any,
-                          specs: Sequence[ProjectionSpec]) -> Dict[str, Any]:
-    """Zero theta warm-start vectors, one per packed plan (pytree-safe)."""
-    plans, _ = build_packed_plans(params, specs)
-    return {p.key: jnp.zeros((p.num_segments,), jnp.float32) for p in plans}
-
-
-def apply_constraints_packed(params: Any, specs: Sequence[ProjectionSpec],
-                             step: Optional[jnp.ndarray] = None,
-                             state: Optional[Dict[str, Any]] = None,
-                             engine: str = "newton"):
-    """Project matching leaves with packed multi-tensor batching.
-
-    All l1,inf-family leaves of equal ``every_k`` are packed into one
-    (n_max, sum m) buffer and projected by a single segmented solve; other
-    norms fall back to the per-leaf path. ``state`` threads the per-plan
-    theta vectors (Newton warm start) between train steps — pass the dict
-    returned by ``init_projection_state`` (or a previous call) and reuse the
-    returned dict. ``engine``: "newton" (pure-jnp segmented solver) or
-    "pallas" (fused-kernel engine, interpret mode off-TPU).
-
-    Returns (params, new_state). Bit-equal (up to fp accumulation order) to
-    per-matrix projection on every leaf.
-    """
-    if not specs:
-        return params, (state or {})
-    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    leaves = [leaf for _, leaf in flat]
-    plans, per_leaf = build_packed_plans(params, specs)
-    new_state: Dict[str, Any] = {}
-
-    for plan in plans:
-        pieces = [_pack_entry(leaves[e.index], e, plan.n_max)
-                  for e in plan.entries]
-        Ypk = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
-        sids = jnp.asarray(plan.seg_ids())
-        C_seg = jnp.asarray(plan.radii())
-        theta0 = None if state is None else state.get(plan.key)
-        ENGINE_INVOCATIONS["packed"] += 1
-        if engine == "pallas":
-            from ..kernels.l1inf.ops import project_l1inf_pallas_segmented
-            Xpk, theta = project_l1inf_pallas_segmented(
-                Ypk, sids, C_seg, num_segments=plan.num_segments,
-                theta0=theta0,
-                interpret=jax.default_backend() != "tpu")
-        else:
-            Xpk, theta, _ = project_l1inf_segmented(
-                Ypk, sids, C_seg, num_segments=plan.num_segments,
-                theta0=theta0)
-        for e in plan.entries:
-            block = jax.lax.slice_in_dim(
-                Xpk, e.col_start, e.col_start + e.lead * e.m_pad, axis=1)
-            projected = _unpack_entry(block, e, leaves[e.index])
-            leaves[e.index] = _gated(projected, leaves[e.index], step,
-                                     plan.every_k)
-        if step is not None and plan.every_k > 1:
-            do = (step % plan.every_k) == 0
-            prev = theta0 if theta0 is not None else jnp.zeros_like(theta)
-            theta = jnp.where(do, theta, prev)
-        new_state[plan.key] = theta
-
-    for i, spec in per_leaf:
-        ENGINE_INVOCATIONS["per_leaf"] += 1
-        fn = _project_fn(spec.norm)
-        projected = _apply_2d(fn, leaves[i], spec.radius, spec.axis)
-        leaves[i] = _gated(projected, leaves[i], step, spec.every_k)
-
-    return jax.tree_util.tree_unflatten(treedef, leaves), new_state
+def _stacked_axis(axis: int, ndim: int) -> int:
+    """Map a spec's max axis (defined on the trailing 2-D slice) to the
+    corresponding axis of an ndim-rank stacked leaf. Negative axes already
+    index from the trailing end, so they pass through unchanged; positive
+    axes shift past the leading stack dims."""
+    return axis if axis < 0 else axis + ndim - 2
 
 
 def column_masks(params: Any, specs: Sequence[ProjectionSpec]) -> Any:
@@ -336,8 +297,8 @@ def column_masks(params: Any, specs: Sequence[ProjectionSpec]) -> Any:
         name = leaf_path_str(path)
         for spec in specs:
             if re.search(spec.pattern, name) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
-                nz = jnp.any(leaf != 0, axis=spec.axis if leaf.ndim == 2 else
-                             (spec.axis - 2 if spec.axis < 0 else spec.axis + leaf.ndim - 2),
+                nz = jnp.any(leaf != 0,
+                             axis=_stacked_axis(spec.axis, leaf.ndim),
                              keepdims=True)
                 return jnp.broadcast_to(nz, leaf.shape).astype(leaf.dtype)
         return jnp.ones_like(leaf)
@@ -361,8 +322,7 @@ def sparsity_report(params: Any, specs: Sequence[ProjectionSpec]) -> dict:
         for spec in specs:
             if re.search(spec.pattern, name) and hasattr(leaf, "ndim") and leaf.ndim >= 2:
                 mat = leaf.reshape((-1,) + leaf.shape[-2:]) if leaf.ndim > 2 else leaf[None]
-                ax = spec.axis + 1 if spec.axis >= 0 else spec.axis
-                dead = jnp.all(mat == 0, axis=ax)
+                dead = jnp.all(mat == 0, axis=_stacked_axis(spec.axis, 3))
                 out[name] = float(100.0 * jnp.mean(dead.astype(jnp.float32)))
                 break
     return out

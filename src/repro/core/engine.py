@@ -1,0 +1,215 @@
+"""ProjectionEngine: ONE projected-update path for every train loop.
+
+PR 2 left three hand-rolled copies of "adam_update -> packed projection ->
+every_k gate" (train/loop.py, sae/train.py, launch/steps.py), each wiring the
+packing, theta warm-start state, and gating by hand — and the production
+launch path cold-started Newton every step because nothing threaded the
+state. This module centralizes the runtime side of the constraint system:
+
+  * ``ProjectionEngine`` owns plan building (``core.constraints``), packing,
+    per-plan theta state, and solver dispatch:
+      - ``newton``  — single-buffer segmented Newton (default, 1 device);
+      - ``pallas``  — fused-kernel engine (interpret mode off-TPU);
+      - ``sharded`` — mesh-resident shard_map solve (``dist.projection``):
+        weight shards never gather; per-segment statistics cross the link
+        as one (num_segments,) psum per Newton evaluation.
+  * ``engine.apply(params, step=, state=)`` projects a param pytree —
+    the packed fast path plus the per-leaf fallback for unpackable norms.
+  * ``engine.projected_update(grads, opt_state, params, acfg, ...)`` is the
+    shared step core all three train loops build on: optimizer update,
+    projection, optional support-mask freeze, warm-start state threading.
+
+The theta warm-start contract (DESIGN.md §1/§7): each plan's state entry is
+the previous solve's per-segment theta vector; passing it back makes
+steady-state solves converge in the 2 bootstrap Eq.-(19) evaluations.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .constraints import (ProjectionSpec, build_packed_plans, engine_count,
+                          _apply_2d, _gated, _pack_entry, _project_fn,
+                          _unpack_entry)
+from .l1inf import project_l1inf_segmented
+
+__all__ = ["ProjectionEngine", "apply_constraints_packed",
+           "init_projection_state"]
+
+_SOLVERS = ("newton", "pallas", "sharded")
+
+
+class ProjectionEngine:
+    """Plan building + theta state + solver dispatch for projection specs.
+
+    Construct once per step-build (the specs and solver are static); call
+    ``apply``/``projected_update`` inside the traced step. ``solver`` is the
+    default for every packed plan; ``mesh`` is required for "sharded".
+    """
+
+    def __init__(self, specs: Sequence[ProjectionSpec],
+                 *, solver: str = "newton", mesh=None):
+        if solver not in _SOLVERS:
+            raise ValueError(f"unknown solver {solver!r} (one of {_SOLVERS})")
+        if solver == "sharded" and mesh is None:
+            raise ValueError("solver='sharded' needs a mesh")
+        self.specs = tuple(specs or ())
+        self.solver = solver
+        self.mesh = mesh
+
+    # -- static plan/state helpers (shape-only, safe while tracing) ---------
+
+    def plans(self, params: Any):
+        """(packed plans, per-leaf remainder) for this param pytree."""
+        return build_packed_plans(params, self.specs)
+
+    def init_state(self, params: Any) -> Dict[str, Any]:
+        """Zero theta warm-start vectors, one per packed plan (pytree-safe,
+        works on ShapeDtypeStructs for dry-run lowering)."""
+        plans, _ = self.plans(params)
+        return {p.key: jnp.zeros((p.num_segments,), jnp.float32)
+                for p in plans}
+
+    # -- the projection ------------------------------------------------------
+
+    def _solve_plan(self, plan, leaves, theta0):
+        """One packed solve. Returns (Xpk-or-leaf-list, theta, iters)."""
+        engine_count(f"{plan.key}/{self.solver}")
+        if self.solver == "sharded":
+            from ..dist.projection import project_plan_sharded
+            vals = [leaves[e.index] for e in plan.entries]
+            outs, theta, iters = project_plan_sharded(
+                vals, plan, self.mesh, theta0=theta0)
+            return dict(zip((e.index for e in plan.entries), outs)), \
+                theta, iters
+        pieces = [_pack_entry(leaves[e.index], e, plan.n_max)
+                  for e in plan.entries]
+        Ypk = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+        sids = jnp.asarray(plan.seg_ids())
+        C_seg = jnp.asarray(plan.radii())
+        if self.solver == "pallas":
+            from ..kernels.l1inf.ops import project_l1inf_pallas_segmented
+            Xpk, theta = project_l1inf_pallas_segmented(
+                Ypk, sids, C_seg, num_segments=plan.num_segments,
+                theta0=theta0,
+                interpret=jax.default_backend() != "tpu")
+            iters = jnp.asarray(-1, jnp.int32)   # kernel keeps its own count
+        else:
+            Xpk, theta, iters = project_l1inf_segmented(
+                Ypk, sids, C_seg, num_segments=plan.num_segments,
+                theta0=theta0)
+        outs = {}
+        for e in plan.entries:
+            block = jax.lax.slice_in_dim(
+                Xpk, e.col_start, e.col_start + e.lead * e.m_pad, axis=1)
+            outs[e.index] = _unpack_entry(block, e, leaves[e.index])
+        return outs, theta, iters
+
+    def apply(self, params: Any, *, step: Optional[jnp.ndarray] = None,
+              state: Optional[Dict[str, Any]] = None,
+              with_stats: bool = False):
+        """Project matching leaves of ``params``.
+
+        All l1,inf-family leaves of equal ``every_k`` are packed into one
+        buffer and projected by a single solve of the configured solver;
+        other norms fall back to the per-leaf path. ``state`` threads the
+        per-plan theta vectors (Newton warm start) between train steps —
+        pass the dict from ``init_state`` (or a previous call) and reuse
+        the returned dict. ``step`` gates ``every_k > 1`` specs.
+
+        Returns (params, new_state), plus a {plan.key: Eq.-(19) eval count}
+        stats dict when ``with_stats``. Results are bit-equal (up to fp
+        accumulation order) to per-matrix projection on every leaf,
+        whichever solver runs.
+        """
+        if not self.specs:
+            out = (params, dict(state or {}))
+            return out + ({},) if with_stats else out
+        flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+        leaves = [leaf for _, leaf in flat]
+        plans, per_leaf = self.plans(params)
+        new_state: Dict[str, Any] = {}
+        stats: Dict[str, Any] = {}
+
+        for plan in plans:
+            theta0 = None if state is None else state.get(plan.key)
+            projected, theta, iters = self._solve_plan(plan, leaves, theta0)
+            for e in plan.entries:
+                leaves[e.index] = _gated(projected[e.index], leaves[e.index],
+                                         step, plan.every_k)
+            if step is not None and plan.every_k > 1:
+                do = (step % plan.every_k) == 0
+                prev = theta0 if theta0 is not None else jnp.zeros_like(theta)
+                theta = jnp.where(do, theta, prev)
+            new_state[plan.key] = theta
+            stats[plan.key] = iters
+
+        for i, spec in per_leaf:
+            engine_count("per_leaf")
+            fn = _project_fn(spec.norm)
+            projected = _apply_2d(fn, leaves[i], spec.radius, spec.axis)
+            leaves[i] = _gated(projected, leaves[i], step, spec.every_k)
+
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+        if with_stats:
+            return params, new_state, stats
+        return params, new_state
+
+    # -- the shared projected-update step core -------------------------------
+
+    def projected_update(self, grads: Any, opt_state, params: Any, acfg,
+                         *, lr=None, mask: Any = None,
+                         state: Optional[Dict[str, Any]] = None,
+                         with_stats: bool = False):
+        """Optimizer update + projection + gating: the step core shared by
+        train/loop.py, sae/train.py, and launch/steps.py.
+
+        Runs ``adam_update`` (with optional ``lr`` schedule override and
+        ``mask`` gradient freeze), projects through ``apply`` gated on the
+        NEW optimizer count, re-applies ``mask`` to the params afterwards
+        (the double-descent support freeze — projection may revive a clipped
+        column, the mask keeps it dead), and threads the theta state.
+
+        Returns (params, opt_state, proj_state) (+ stats when requested).
+        """
+        from ..optim.adam import adam_update
+        new_params, new_opt = adam_update(grads, opt_state, params, acfg,
+                                          lr=lr, mask=mask)
+        stats: Dict[str, Any] = {}
+        if self.specs:
+            new_params, state, stats = self.apply(
+                new_params, step=new_opt.count, state=state, with_stats=True)
+            if mask is not None:
+                new_params = jax.tree_util.tree_map(
+                    lambda p, m: p * m, new_params, mask)
+        else:
+            state = dict(state or {})
+        if with_stats:
+            return new_params, new_opt, state, stats
+        return new_params, new_opt, state
+
+
+# ---------------------------------------------------------------------------
+# functional wrappers (the PR-2 API, now thin shims over the engine)
+# ---------------------------------------------------------------------------
+
+def init_projection_state(params: Any,
+                          specs: Sequence[ProjectionSpec]) -> Dict[str, Any]:
+    """Zero theta warm-start vectors, one per packed plan (pytree-safe)."""
+    return ProjectionEngine(specs).init_state(params)
+
+
+def apply_constraints_packed(params: Any, specs: Sequence[ProjectionSpec],
+                             step: Optional[jnp.ndarray] = None,
+                             state: Optional[Dict[str, Any]] = None,
+                             engine: str = "newton", mesh=None):
+    """Project matching leaves with packed multi-tensor batching.
+
+    Functional form of ``ProjectionEngine.apply`` — ``engine`` picks the
+    solver ("newton" | "pallas" | "sharded"; the latter needs ``mesh``).
+    Returns (params, new_state).
+    """
+    return ProjectionEngine(specs, solver=engine, mesh=mesh).apply(
+        params, step=step, state=state)

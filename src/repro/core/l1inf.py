@@ -66,6 +66,7 @@ __all__ = [
     "project_l1inf_newton",
     "project_l1inf_newton_stats",
     "project_l1inf_segmented",
+    "project_l1inf_segmented_sharded",
     "theta_l1inf",
     "column_support",
     "active_compaction",
@@ -347,26 +348,28 @@ def project_l1inf_newton_stats(Y: jnp.ndarray, C, axis: int = 0,
 # segmented Newton: many independent balls in one packed buffer
 # -----------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "max_iter"))
-def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
-                            *, num_segments: int,
-                            theta0: Optional[jnp.ndarray] = None,
-                            max_iter: int = 32):
-    """Project each column group of a packed (n, M) buffer onto its own ball.
+def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
+                     num_segments: int,
+                     theta0: Optional[jnp.ndarray],
+                     max_iter: int,
+                     axis_names: Tuple[str, ...] = (),
+                     contrib: Optional[jnp.ndarray] = None):
+    """Shared body of the segmented Newton solve (local and sharded forms).
 
-    ``seg_ids`` (M,) int32 maps column -> segment in [0, num_segments);
-    columns with ``seg_ids == num_segments`` are lane padding (dummy segment:
-    never active, projected to themselves). ``C_seg`` (num_segments,) holds
-    one radius per segment. The max axis is 0 (callers canonicalize).
+    With ``axis_names`` empty this is the single-buffer solve. With
+    ``axis_names`` given, the function must run inside ``shard_map`` over
+    those mesh axes: ``Y``/``seg_ids``/``contrib`` are the rank's LOCAL
+    column block and every per-segment reduction is followed by a
+    ``psum``/``pmax`` over ``axis_names``, so the (num_segments,)-vector
+    Newton state is bit-identical on every rank and identical (up to fp
+    reduction order) to the gathered solve. Only O(num_segments) floats
+    cross the link per Eq.-(19) evaluation — never a column.
 
-    The Newton iteration runs on a theta VECTOR (one per segment): the
-    Eq.-(19) sums become segment-sums and every step is still one fused
-    compare-and-sum over the whole packed buffer — one sweep per step for
-    ALL matrices of a group instead of one solve per matrix. ``theta0``
-    (num_segments,) warm-starts all segments (see module docstring).
-
-    Returns (X, theta_seg, iters) with iters the max Eq.-(19) evaluation
-    count across segments.
+    ``contrib`` (M,) bool marks the columns this rank OWNS for reduction
+    purposes: a column replicated across ranks (a leaf whose width the mesh
+    does not divide) must be summed exactly once, so only rank 0 sets its
+    contrib bit; the clip/identity output math still runs on every rank
+    (it is pure per-column given the shared theta).
     """
     if Y.ndim != 2:
         raise ValueError("packed buffer must be 2-D")
@@ -378,13 +381,20 @@ def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
     C_seg = jnp.asarray(C_seg, dt)
     tiny = jnp.finfo(dt).tiny
 
+    def allsum(v):
+        return jax.lax.psum(v, axis_names) if axis_names else v
+
+    def allmax(v):
+        return jax.lax.pmax(v, axis_names) if axis_names else v
+
     Z, S, b = _sorted_stats(A)
     colmax = Z[0]
     valid = seg_ids < G
+    own = valid if contrib is None else jnp.logical_and(valid, contrib)
     sum_seg = functools.partial(jax.ops.segment_sum, segment_ids=seg_ids,
                                 num_segments=G + 1)
-    norm_seg = sum_seg(jnp.where(valid, colmax, 0.0))[:G]
-    m_seg = sum_seg(valid.astype(dt))[:G]
+    norm_seg = allsum(sum_seg(jnp.where(own, colmax, 0.0))[:G])
+    m_seg = allsum(sum_seg(own.astype(dt))[:G])
 
     Csafe = jnp.where(C_seg > 0, C_seg, jnp.ones_like(C_seg))
     cold = jnp.maximum((norm_seg - Csafe) / jnp.maximum(m_seg, 1.0), 0.0)
@@ -401,8 +411,9 @@ def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
         th_col = theta_cols(th_seg)
         k, S_k, active = _theta_state(S, b, th_col)
         active = jnp.logical_and(active, valid)
-        Aa = sum_seg(jnp.where(active, S_k / k, 0.0))[:G]
-        Ba = sum_seg(jnp.where(active, 1.0 / k, 0.0))[:G]
+        counted = jnp.logical_and(active, own)
+        Aa = allsum(sum_seg(jnp.where(counted, S_k / k, 0.0))[:G])
+        Ba = allsum(sum_seg(jnp.where(counted, 1.0 / k, 0.0))[:G])
         new = (Aa - Csafe) / jnp.maximum(Ba, tiny)
         mu = jnp.where(active, jnp.maximum((S_k - th_col) / k, 0.0), 0.0)
         return new, mu
@@ -445,11 +456,59 @@ def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
     X = jnp.where(inside_col[None, :], Y.astype(dt), X)
     X = jnp.where(zero_col[None, :], 0.0, X)
 
-    seg_max = jax.ops.segment_max(
-        jnp.where(valid, S[n - 1], 0.0), seg_ids, num_segments=G + 1)[:G]
+    # max is idempotent, so replicated columns need no ownership mask here
+    seg_max = allmax(jax.ops.segment_max(
+        jnp.where(valid, S[n - 1], 0.0), seg_ids, num_segments=G + 1)[:G])
     theta_out = jnp.where(zero_seg, seg_max,
                           jnp.where(inside_seg, 0.0, theta))
     return X.astype(Y.dtype), theta_out, iters
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "max_iter"))
+def project_l1inf_segmented(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
+                            *, num_segments: int,
+                            theta0: Optional[jnp.ndarray] = None,
+                            max_iter: int = 32):
+    """Project each column group of a packed (n, M) buffer onto its own ball.
+
+    ``seg_ids`` (M,) int32 maps column -> segment in [0, num_segments);
+    columns with ``seg_ids == num_segments`` are lane padding (dummy segment:
+    never active, projected to themselves). ``C_seg`` (num_segments,) holds
+    one radius per segment. The max axis is 0 (callers canonicalize).
+
+    The Newton iteration runs on a theta VECTOR (one per segment): the
+    Eq.-(19) sums become segment-sums and every step is still one fused
+    compare-and-sum over the whole packed buffer — one sweep per step for
+    ALL matrices of a group instead of one solve per matrix. ``theta0``
+    (num_segments,) warm-starts all segments (see module docstring).
+
+    Returns (X, theta_seg, iters) with iters the max Eq.-(19) evaluation
+    count across segments.
+    """
+    return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
+                            max_iter)
+
+
+def project_l1inf_segmented_sharded(Y: jnp.ndarray, seg_ids: jnp.ndarray,
+                                    C_seg, *, num_segments: int,
+                                    axis_names: Tuple[str, ...],
+                                    theta0: Optional[jnp.ndarray] = None,
+                                    contrib: Optional[jnp.ndarray] = None,
+                                    max_iter: int = 32):
+    """Sharded twin of ``project_l1inf_segmented`` — call inside shard_map.
+
+    ``Y``/``seg_ids``/``contrib`` are this rank's LOCAL column block of the
+    packed buffer (columns sharded over ``axis_names``, rows resident).
+    Per-segment statistics are reduced locally then combined with one
+    ``psum`` of a (num_segments,) vector per Eq.-(19) evaluation (plus one
+    ``pmax`` for the C<=0 threshold), so theta is identical on every rank
+    and equal to the gathered solve up to fp reduction order; weight shards
+    never leave their device. See ``repro.dist.projection`` for the packing
+    orchestration and DESIGN.md §7 for the math and byte counts.
+    """
+    return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
+                            max_iter, axis_names=tuple(axis_names),
+                            contrib=contrib)
 
 
 @functools.partial(jax.jit, static_argnames=("axis",))

@@ -6,20 +6,23 @@ Submodules:
                 shard (GSPMD logical-axis layer under every model)
   compression — error-feedback top-k + shared-scale int8, compressed_psum
   pipeline    — build_pipeline_fn microbatch ring pipeline (shard_map)
+  projection  — mesh-resident packed l1,inf projection (shard_map segmented
+                Newton; mesh-divisible shards never gather — DESIGN.md §7)
   watchdog    — StepWatchdog EWMA straggler detector
 """
-from . import compression, pipeline, sharding, watchdog
+from . import compression, pipeline, projection, sharding, watchdog
 from .compression import (compressed_psum, ef_step, int8_dequantize,
                           int8_quantize, topk_compress, topk_decompress)
 from .pipeline import build_pipeline_fn
+from .projection import project_plan_sharded, shard_packed_plan
 from .sharding import (axis_rules, current_rules, default_rules, logical_spec,
                        shard)
 from .watchdog import StepWatchdog
 
 __all__ = [
-    "sharding", "compression", "pipeline", "watchdog",
+    "sharding", "compression", "pipeline", "projection", "watchdog",
     "default_rules", "axis_rules", "current_rules", "logical_spec", "shard",
     "ef_step", "int8_quantize", "int8_dequantize", "topk_compress",
     "topk_decompress", "compressed_psum", "build_pipeline_fn",
-    "StepWatchdog",
+    "project_plan_sharded", "shard_packed_plan", "StepWatchdog",
 ]

@@ -1,0 +1,171 @@
+"""Sharding-aware packed l1,inf projection (DESIGN.md §7).
+
+The packed engine in ``core.constraints``/``core.engine`` concatenates every
+l1,inf leaf into one (n_max, sum m) buffer. Single-device that is ideal; under
+GSPMD it is a disaster: the concatenate forces every FSDP/TP-sharded weight to
+be all-gathered into a replicated buffer each step. This module keeps the
+math identical while keeping shards resident:
+
+  * the packed buffer is laid out COLUMN-SHARDED over the whole mesh — each
+    rank owns ``m / D`` columns of every entry (columns are independent
+    sub-problems: sort, prefix sums, and the final clip never cross columns);
+  * entering ``shard_map``, GSPMD moves each leaf from its parameter layout
+    (e.g. FSDP rows over "data", TP columns over "model") to the canonical
+    column shard — a balanced all-to-all of ``|leaf| / D`` bytes per rank,
+    never a full-weight all-gather;
+  * the segmented Newton runs on local blocks; the only cross-rank traffic
+    per Eq.-(19) evaluation is one psum of a (num_segments,) f32 vector
+    (``core.l1inf.project_l1inf_segmented_sharded``);
+  * leaves whose column count the mesh does not divide FALL BACK to
+    replication inside the body (their reduction contributions are masked
+    to rank 0 so every column is counted exactly once) — that fallback IS
+    a per-step gather of the leaf, so ``shard_packed_plan`` warns loudly;
+    pad the projected dim to a device-count multiple to stay resident.
+
+Theta (and hence the projected weights) match the gathered solve up to fp
+reduction order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from ..core.constraints import (PackedPlan, _PackedEntry, _pack_entry,
+                                _unpack_entry, _LANE)
+from ..core.l1inf import project_l1inf_segmented_sharded
+
+__all__ = ["ShardedPlan", "shard_packed_plan", "project_plan_sharded"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPlan:
+    """Per-rank layout of one PackedPlan on a mesh (all fields static).
+
+    ``local`` is a PackedPlan describing each rank's column block: entries
+    keep their global rows/lead/segment ids but ``m``/``m_pad``/``col_start``
+    are per-rank. ``col_sharded[i]`` says entry i's columns are split over
+    the mesh (vs replicated on every rank and owned by rank 0).
+    """
+    global_plan: PackedPlan
+    local: PackedPlan
+    col_sharded: Tuple[bool, ...]
+    n_devices: int
+
+    def owned_cols(self) -> np.ndarray:
+        """Static part of the contribution mask: True for columns of
+        column-sharded entries (every rank owns its slice); False for
+        replicated entries' columns (ownership resolves to rank 0 at
+        trace time) and for lane padding (invalid anyway)."""
+        owned = np.zeros((self.local.total_cols,), bool)
+        for e, sh in zip(self.local.entries, self.col_sharded):
+            if sh:
+                lo = e.col_start
+                owned[lo: lo + e.lead * e.m_pad] = True
+        return owned
+
+
+def shard_packed_plan(plan: PackedPlan, n_devices: int) -> ShardedPlan:
+    """Split a packed plan column-wise over ``n_devices`` ranks.
+
+    Entries whose column count is divisible by the device count get
+    ``m / D`` columns per rank (lane-padded locally); the rest stay
+    replicated. Pure shape bookkeeping — safe during tracing.
+    """
+    entries, flags, col = [], [], 0
+    for e in plan.entries:
+        sharded = n_devices > 1 and e.m % n_devices == 0
+        if not sharded and n_devices > 1:
+            # replication means GSPMD gathers this leaf at the shard_map
+            # boundary every step — the cost the sharded engine exists to
+            # avoid. Loud, because the caller can usually fix it by padding
+            # the projected dim to a device-count multiple.
+            warnings.warn(
+                f"sharded projection: leaf {e.shape} has {e.m} columns, "
+                f"not divisible by the {n_devices}-device mesh — this "
+                f"entry is replicated (a per-step all-gather)",
+                stacklevel=2)
+        m_loc = e.m // n_devices if sharded else e.m
+        m_pad = -(-m_loc // _LANE) * _LANE
+        entries.append(dataclasses.replace(e, m=m_loc, m_pad=m_pad,
+                                           col_start=col))
+        flags.append(sharded)
+        col += e.lead * m_pad
+    local = PackedPlan(key=plan.key, every_k=plan.every_k, n_max=plan.n_max,
+                       total_cols=col, num_segments=plan.num_segments,
+                       entries=tuple(entries))
+    return ShardedPlan(global_plan=plan, local=local,
+                       col_sharded=tuple(flags), n_devices=n_devices)
+
+
+def _col_dim(e: _PackedEntry) -> int:
+    """Index of the canonical COLUMN dim in the entry's original leaf shape
+    (the trailing matrix dim, or the one before it when the spec's max axis
+    selected the trailing dim)."""
+    return len(e.shape) - 2 if e.transpose else len(e.shape) - 1
+
+
+def _leaf_spec(e: _PackedEntry, sharded: bool,
+               axis_names: Tuple[str, ...]) -> P:
+    if not sharded:
+        return P(*([None] * len(e.shape)))
+    axes = [None] * len(e.shape)
+    axes[_col_dim(e)] = axis_names if len(axis_names) > 1 else axis_names[0]
+    return P(*axes)
+
+
+def project_plan_sharded(leaves: Sequence[jnp.ndarray], plan: PackedPlan,
+                         mesh: Mesh,
+                         theta0: Optional[jnp.ndarray] = None,
+                         max_iter: int = 32):
+    """Project one packed plan's leaves, shards resident (shard_map).
+
+    ``leaves`` are the plan entries' leaf arrays in entry order (any
+    sharding — GSPMD reshards to the canonical column layout at the
+    shard_map boundary, an all-to-all, not a gather). Returns
+    (projected_leaves, theta, iters) with theta/iters replicated.
+    """
+    axis_names = tuple(mesh.axis_names)
+    D = int(np.prod([mesh.shape[a] for a in axis_names], dtype=np.int64))
+    sp = shard_packed_plan(plan, D)
+    sids = sp.local.seg_ids()
+    C_seg = plan.radii()
+    owned = sp.owned_cols()
+    n_max = plan.n_max
+    G = plan.num_segments
+    if theta0 is None:
+        theta0 = jnp.zeros((G,), jnp.float32)
+
+    def body(th0, *lv):
+        rank = jnp.zeros((), jnp.int32)
+        for a in axis_names:
+            rank = rank * mesh.shape[a] + jax.lax.axis_index(a)
+        contrib = jnp.logical_or(jnp.asarray(owned), rank == 0)
+        pieces = [_pack_entry(x, e, n_max)
+                  for x, e in zip(lv, sp.local.entries)]
+        Ypk = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
+        Xpk, theta, iters = project_l1inf_segmented_sharded(
+            Ypk, jnp.asarray(sids), jnp.asarray(C_seg), num_segments=G,
+            axis_names=axis_names, theta0=th0, contrib=contrib,
+            max_iter=max_iter)
+        outs = []
+        for x, e in zip(lv, sp.local.entries):
+            block = jax.lax.slice_in_dim(
+                Xpk, e.col_start, e.col_start + e.lead * e.m_pad, axis=1)
+            outs.append(_unpack_entry(block, e, x))
+        return tuple(outs), theta, iters
+
+    leaf_specs = tuple(_leaf_spec(e, sh, axis_names)
+                       for e, sh in zip(plan.entries, sp.col_sharded))
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(None),) + leaf_specs,
+                   out_specs=(leaf_specs, P(None), P()),
+                   check_rep=False)
+    outs, theta, iters = fn(jnp.asarray(theta0, jnp.float32), *leaves)
+    return list(outs), theta, iters

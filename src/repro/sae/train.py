@@ -17,9 +17,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import (ProjectionSpec, apply_constraints_packed, column_masks,
-                    init_projection_state, sparsity_report)
-from ..optim import AdamConfig, adam_init, adam_update
+from ..core import ProjectionEngine, ProjectionSpec, column_masks
+from ..optim import AdamConfig, adam_init
 from .model import SAEConfig, sae_init, sae_loss, accuracy
 
 __all__ = ["SAETrainConfig", "train_sae", "SAEResult"]
@@ -46,28 +45,25 @@ class SAEResult:
 
 def _make_step(cfg: SAEConfig, tcfg: SAETrainConfig, acfg: AdamConfig):
     specs = (tcfg.projection,) if tcfg.projection else ()
+    # the shared projected-update step core: Adam (grads masked), packed
+    # warm-started projection, then the mask freeze (Algorithm 3)
+    engine = ProjectionEngine(specs)
 
     @jax.jit
     def step(params, opt_state, proj_state, x, y, mask):
         (loss, aux), grads = jax.value_and_grad(
             lambda p: sae_loss(p, x, y, cfg), has_aux=True)(params)
-        params, opt_state = adam_update(grads, opt_state, params, acfg,
-                                        mask=mask)
-        if specs:
-            # packed projection; proj_state threads theta warm starts so
-            # steady-state solves converge in 1-2 Newton iterations
-            params, proj_state = apply_constraints_packed(
-                params, specs, state=proj_state)
-            params = jax.tree_util.tree_map(lambda p, m: p * m, params, mask)
+        params, opt_state, proj_state = engine.projected_update(
+            grads, opt_state, params, acfg, mask=mask, state=proj_state)
         return params, opt_state, proj_state, loss, aux
 
-    return step, specs
+    return step, engine
 
 
-def _run_descent(params, step_fn, specs, X, y, tcfg, mask, rng):
+def _run_descent(params, step_fn, engine, X, y, tcfg, mask, rng):
     acfg = AdamConfig(lr=tcfg.lr)
     opt_state = adam_init(params, acfg)
-    proj_state = init_projection_state(params, specs) if specs else {}
+    proj_state = engine.init_state(params)
     n = X.shape[0]
     history = []
     for epoch in range(tcfg.epochs):
@@ -106,10 +102,10 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
             tcfg.projection, norm="l1inf"))
     else:
         tcfg1 = tcfg
-    step_fn, step_specs = _make_step(cfg, tcfg1, acfg)
+    step_fn, step_engine = _make_step(cfg, tcfg1, acfg)
 
     # ---- descent 1: projected training --------------------------------
-    params, hist1 = _run_descent(params0, step_fn, step_specs, X_train,
+    params, hist1 = _run_descent(params0, step_fn, step_engine, X_train,
                                  y_train_j, tcfg, ones_mask, rng)
     history = [("descent1", hist1)]
 
@@ -120,9 +116,9 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
         rewound = jax.tree_util.tree_map(lambda p0, m: p0 * m, params0, masks)
         if masked_mode:  # retrain mask-only, no clipping
             import dataclasses as _dc
-            step_fn, step_specs = _make_step(
+            step_fn, step_engine = _make_step(
                 cfg, _dc.replace(tcfg, projection=None), acfg)
-        params, hist2 = _run_descent(rewound, step_fn, step_specs, X_train,
+        params, hist2 = _run_descent(rewound, step_fn, step_engine, X_train,
                                      y_train_j, tcfg, masks, rng)
         history.append(("descent2", hist2))
 

@@ -17,9 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from ..models.zoo import Model
-from ..optim import AdamConfig, adam_init, adam_update
-from ..core import (apply_constraints_packed, init_projection_state,
-                    sparsity_report)
+from ..optim import AdamConfig, adam_init
+from ..core import ProjectionEngine, sparsity_report
 from ..checkpoint import AsyncCheckpointer, latest_step, restore_tree
 from ..dist.sharding import axis_rules
 from ..dist.watchdog import StepWatchdog
@@ -41,9 +40,14 @@ class TrainConfig:
 
 
 def build_accum_step(model: Model, acfg: AdamConfig, tcfg: TrainConfig,
-                     mesh=None, rules=None):
-    """jit'd train step with optional microbatch accumulation via lax.scan."""
+                     mesh=None, rules=None, engine: ProjectionEngine = None):
+    """jit'd train step with optional microbatch accumulation via lax.scan.
+    The update half is the shared ``ProjectionEngine.projected_update`` step
+    core (Adam + packed warm-started projection + every_k gate)."""
     cfg = model.cfg
+    if engine is None:
+        engine = ProjectionEngine(
+            cfg.projection_specs if tcfg.with_projection else ())
 
     def loss_fn(params, batch):
         return model.loss(params, batch)
@@ -71,14 +75,8 @@ def build_accum_step(model: Model, acfg: AdamConfig, tcfg: TrainConfig,
             else:
                 (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                     params, batch)
-            params, opt_state = adam_update(grads, opt_state, params, acfg,
-                                            lr=lr)
-            if tcfg.with_projection and cfg.projection_specs:
-                # packed multi-tensor batching: all l1inf leaves in one
-                # segmented solve, warm-started from last step's theta
-                params, proj_state = apply_constraints_packed(
-                    params, cfg.projection_specs, step=opt_state.count,
-                    state=proj_state)
+            params, opt_state, proj_state = engine.projected_update(
+                grads, opt_state, params, acfg, lr=lr, state=proj_state)
         return params, opt_state, proj_state, loss
 
     return jax.jit(step, donate_argnums=(0, 1, 2))
@@ -99,24 +97,33 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
     opt_state = adam_init(params, acfg)
     start_step = 0
 
+    engine = ProjectionEngine(
+        model.cfg.projection_specs if tcfg.with_projection else ())
+    proj_state = engine.init_state(params)
+
     ckpt = None
     if tcfg.ckpt_dir:
         ckpt = AsyncCheckpointer(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
         if resume and latest_step(tcfg.ckpt_dir) is not None:
-            state = {"params": params, "opt": opt_state}
-            state, start_step = restore_tree(state, tcfg.ckpt_dir)
+            # the projection theta state rides in the checkpoint so a resume
+            # stays warm-started; pre-engine checkpoints lack it — fall back
+            # to a cold Newton start rather than refusing the restore
+            try:
+                state = {"params": params, "opt": opt_state,
+                         "proj": proj_state}
+                state, start_step = restore_tree(state, tcfg.ckpt_dir)
+                proj_state = state["proj"]
+            except KeyError:
+                state = {"params": params, "opt": opt_state}
+                state, start_step = restore_tree(state, tcfg.ckpt_dir)
+                print("[train] checkpoint has no projection state; "
+                      "cold-starting Newton")
             params, opt_state = state["params"], state["opt"]
             print(f"[train] resumed from step {start_step}")
 
-    step_fn = build_accum_step(model, acfg, tcfg, mesh, rules)
+    step_fn = build_accum_step(model, acfg, tcfg, mesh, rules, engine=engine)
     watchdog = StepWatchdog(on_straggler=lambda s, dt, ew: print(
         f"[watchdog] straggler step {s}: {dt:.3f}s vs EWMA {ew:.3f}s"))
-
-    # theta warm-start vectors for the packed projection (not checkpointed:
-    # a cold restart just pays a few extra Newton iterations on step 1)
-    proj_state = (init_projection_state(params, model.cfg.projection_specs)
-                  if tcfg.with_projection and model.cfg.projection_specs
-                  else {})
 
     losses = []
     for step in range(start_step, tcfg.steps):
@@ -133,13 +140,16 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
             print(f"[train] step {step:5d} loss {loss_f:.4f} "
                   f"({dt*1e3:.0f} ms)", flush=True)
         if ckpt and (step + 1) % tcfg.ckpt_every == 0:
-            ckpt.save({"params": params, "opt": opt_state}, step + 1)
+            ckpt.save({"params": params, "opt": opt_state,
+                       "proj": proj_state}, step + 1)
     if ckpt:
-        ckpt.save({"params": params, "opt": opt_state}, tcfg.steps)
+        ckpt.save({"params": params, "opt": opt_state, "proj": proj_state},
+                  tcfg.steps)
         ckpt.wait()
 
     report = {}
     if model.cfg.projection_specs:
         report = sparsity_report(params, model.cfg.projection_specs)
     return {"params": params, "opt_state": opt_state, "losses": losses,
-            "sparsity": report, "straggler_events": watchdog.events}
+            "proj_state": proj_state, "sparsity": report,
+            "straggler_events": watchdog.events}

@@ -1,0 +1,323 @@
+"""ProjectionEngine: the unified projected-update step core.
+
+Covers: solver dispatch + functional-shim equivalence, the shared
+``projected_update`` core against the hand-rolled adam+project sequence,
+warm-started Newton in the PRODUCTION train step (steady-state evals <= 2,
+via the step's stats/metrics), theta-state checkpoint/restore in the runner
+loop (incl. the pre-engine-checkpoint fallback), per-plan invocation
+counters, and the ``column_masks``/``sparsity_report`` axis arithmetic on
+stacked (ndim>2) leaves and axis=1 specs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ProjectionEngine, ProjectionSpec, apply_constraints,
+                        apply_constraints_packed, column_masks,
+                        engine_counters, engine_counters_reset,
+                        init_projection_state, sparsity_report)
+from repro.optim import AdamConfig, adam_init, adam_update
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "enc1": {"w": jnp.asarray(rng.normal(size=(24, 50)), jnp.float32)},
+        "blocks": {"mlp_w1": jnp.asarray(rng.normal(size=(3, 16, 40)),
+                                         jnp.float32)},
+    }
+
+
+SPECS = (ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0, axis=1),
+         ProjectionSpec(pattern=r"mlp_w1", norm="l1inf", radius=1.5, axis=0))
+
+
+def _tol(a, b, tol=5e-6):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# engine dispatch
+# ---------------------------------------------------------------------------
+
+def test_engine_apply_matches_functional_shim():
+    params = _params()
+    eng = ProjectionEngine(SPECS)
+    state0 = eng.init_state(params)
+    shim0 = init_projection_state(params, SPECS)
+    assert set(state0) == set(shim0)
+    for k in state0:
+        np.testing.assert_array_equal(np.asarray(state0[k]),
+                                      np.asarray(shim0[k]))
+    out_e, st_e = eng.apply(params, state=state0)
+    out_f, st_f = apply_constraints_packed(params, SPECS, state=state0)
+    for a, b in zip(jax.tree_util.tree_leaves(out_e),
+                    jax.tree_util.tree_leaves(out_f)):
+        _tol(a, b)
+    k = list(st_e)[0]
+    _tol(st_e[k], st_f[k])
+
+
+def test_engine_unknown_solver_and_missing_mesh():
+    with pytest.raises(ValueError):
+        ProjectionEngine(SPECS, solver="magic")
+    with pytest.raises(ValueError):
+        ProjectionEngine(SPECS, solver="sharded")
+
+
+def test_engine_with_stats_reports_warm_start_drop():
+    params = _params(1)
+    eng = ProjectionEngine(SPECS)
+    state0 = eng.init_state(params)
+    out, st, stats = eng.apply(params, state=state0, with_stats=True)
+    key = list(st)[0]
+    cold_iters = int(stats[key])
+    assert cold_iters > 2                      # cold solve iterates
+    _, _, stats2 = eng.apply(params, state=st, with_stats=True)
+    assert int(stats2[key]) <= 2               # exact restart: bootstrap only
+
+
+def test_engine_counters_per_plan_and_reset():
+    params = _params(2)
+    engine_counters_reset()
+    eng = ProjectionEngine(SPECS)
+    eng.apply(params, state=eng.init_state(params))
+    counts = engine_counters()
+    assert counts == {"l1inf_packed/k1/newton": 1}
+    eng_p = ProjectionEngine(SPECS, solver="pallas")
+    eng_p.apply(params)
+    counts = engine_counters()
+    assert counts["l1inf_packed/k1/pallas"] == 1
+    assert counts["l1inf_packed/k1/newton"] == 1   # untouched by pallas run
+    engine_counters_reset()
+    assert engine_counters() == {}
+
+
+# ---------------------------------------------------------------------------
+# the shared projected-update step core
+# ---------------------------------------------------------------------------
+
+def test_projected_update_matches_hand_rolled_sequence():
+    params = _params(3)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.ones_like(p) * 0.01, params)
+    acfg = AdamConfig(lr=1e-2)
+    opt = adam_init(params, acfg)
+    eng = ProjectionEngine(SPECS)
+    state0 = eng.init_state(params)
+
+    p1, o1, s1 = eng.projected_update(grads, opt, params, acfg, state=state0)
+
+    p_ref, o_ref = adam_update(grads, opt, params, acfg)
+    p_ref, s_ref = apply_constraints_packed(p_ref, SPECS, step=o_ref.count,
+                                            state=state0)
+    assert int(o1.count) == int(o_ref.count)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p_ref)):
+        _tol(a, b)
+    k = list(s1)[0]
+    _tol(s1[k], s_ref[k])
+
+
+def test_projected_update_mask_freeze():
+    """The mask zeroes both the gradient AND the post-projection params
+    (double-descent support freeze)."""
+    params = _params(4)
+    mask = jax.tree_util.tree_map(jnp.ones_like, params)
+    mask["enc1"]["w"] = mask["enc1"]["w"].at[:, :10].set(0.0)
+    grads = jax.tree_util.tree_map(lambda p: jnp.ones_like(p) * 0.1, params)
+    acfg = AdamConfig(lr=1e-2)
+    opt = adam_init(params, acfg)
+    eng = ProjectionEngine(SPECS)
+    p1, _, _ = eng.projected_update(grads, opt, params, acfg, mask=mask,
+                                    state=eng.init_state(params))
+    np.testing.assert_array_equal(np.asarray(p1["enc1"]["w"][:, :10]), 0.0)
+
+
+def test_production_step_warm_start_steady_state():
+    """Acceptance: the production train step (launch/steps.build_train_step)
+    is warm-started — steady-state Newton evals <= 2, read from the step's
+    metrics (the theta state threads through the step signature)."""
+    from repro.configs import get_reduced
+    from repro.models.zoo import build, make_batch
+    from repro.launch.steps import build_train_step, projection_engine_for
+    from repro.optim import adam_init as _init
+
+    cfg = get_reduced("stablelm_3b")
+    # every_k=1 so every step projects (the reduced spec gates at k=10)
+    cfg = dataclasses.replace(cfg, projection_specs=tuple(
+        dataclasses.replace(s, every_k=1) for s in cfg.projection_specs))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = make_batch(cfg, 2, 16, kind="train")
+    acfg = AdamConfig(lr=1e-4)
+    opt = _init(params, acfg)
+    proj = projection_engine_for(cfg, None).init_state(params)
+    assert proj, "reduced config should build at least one packed plan"
+
+    step = jax.jit(build_train_step(model, None, None, acfg))
+    extra = []
+    for _ in range(6):
+        loss, metrics, params, opt, proj = step(params, opt, proj, batch)
+        extra.append(int(metrics["proj_newton_extra_evals"]))
+    # "extra evals" = Eq.-(19) evaluations beyond the 2-eval bootstrap floor
+    # (the accounting of BENCH_proj.json's warm_start section)
+    assert extra[0] > 2, extra                  # cold start really is cold
+    assert max(extra[3:]) <= 2, extra           # warm: steady state <= 2
+
+
+def test_train_loop_checkpoints_theta_state(tmp_path):
+    """Satellite: a resume restores the projection theta state instead of
+    silently cold-starting Newton."""
+    from repro.configs import get_reduced
+    from repro.models.zoo import build
+    from repro.train.loop import TrainConfig, train
+    from repro.data.pipeline import SyntheticLM, LMBatcher
+    from repro.checkpoint import restore
+
+    cfg = get_reduced("stablelm_3b")
+    cfg = dataclasses.replace(cfg, projection_specs=tuple(
+        dataclasses.replace(s, every_k=1) for s in cfg.projection_specs))
+    model = build(cfg)
+    batcher = LMBatcher(SyntheticLM(cfg.vocab, seed=1), 2, 16)
+    ckpt_dir = str(tmp_path / "ck")
+    tcfg = TrainConfig(steps=2, log_every=100, ckpt_every=100,
+                       ckpt_dir=ckpt_dir)
+    out1 = train(model, batcher, tcfg, resume=False)
+    theta1 = {k: np.asarray(v) for k, v in out1["proj_state"].items()}
+    assert any(v.max() > 0 for v in theta1.values()), theta1
+
+    # the checkpoint on disk carries the proj leaves
+    flat, step = restore(ckpt_dir)
+    assert step == 2
+    assert any(k.startswith("proj/") for k in flat), sorted(flat)
+
+    # resume: starts from step 2 with the saved theta (and trains on)
+    out2 = train(model, batcher, dataclasses.replace(tcfg, steps=4),
+                 resume=True)
+    assert len(out2["losses"]) == 2             # steps 2..3 only
+    assert all(np.isfinite(l) for l in out2["losses"])
+
+
+def test_train_loop_restores_pre_engine_checkpoint(tmp_path):
+    """Back-compat: checkpoints written before the proj state existed
+    restore fine (cold Newton start instead of a crash)."""
+    from repro.configs import get_reduced
+    from repro.models.zoo import build
+    from repro.train.loop import TrainConfig, train
+    from repro.checkpoint import save
+    from repro.data.pipeline import SyntheticLM, LMBatcher
+    from repro.optim import adam_init as _init
+
+    cfg = get_reduced("stablelm_3b")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = _init(params, AdamConfig(lr=3e-4))
+    ckpt_dir = str(tmp_path / "old")
+    save({"params": params, "opt": opt}, ckpt_dir, 1)   # no "proj" leaves
+
+    batcher = LMBatcher(SyntheticLM(cfg.vocab, seed=1), 2, 16)
+    out = train(model, batcher,
+                TrainConfig(steps=3, log_every=100, ckpt_dir=ckpt_dir),
+                resume=True)
+    assert len(out["losses"]) == 2              # resumed from step 1
+    assert all(np.isfinite(l) for l in out["losses"])
+
+
+# ---------------------------------------------------------------------------
+# column_masks / sparsity_report axis arithmetic (previously untested)
+# ---------------------------------------------------------------------------
+
+def _stacked_leaf():
+    """(2, 4, 6) stacked leaf: layer 0 has dead columns {1, 3} along the
+    axis=0 convention (max over rows -> columns indexed by the last dim);
+    layer 1 has dead column {5}."""
+    x = np.ones((2, 4, 6), np.float32)
+    x[0, :, 1] = 0.0
+    x[0, :, 3] = 0.0
+    x[1, :, 5] = 0.0
+    return jnp.asarray(x)
+
+
+def test_column_masks_stacked_axis0():
+    params = {"blocks": {"w": _stacked_leaf()}}
+    specs = (ProjectionSpec(pattern=r"blocks/w", norm="l1inf", radius=1.0,
+                            axis=0),)
+    m = np.asarray(column_masks(params, specs)["blocks"]["w"])
+    assert m.shape == (2, 4, 6)
+    np.testing.assert_array_equal(m[0, :, 1], 0.0)
+    np.testing.assert_array_equal(m[0, :, 3], 0.0)
+    np.testing.assert_array_equal(m[1, :, 5], 0.0)
+    np.testing.assert_array_equal(m[0, :, 0], 1.0)
+    np.testing.assert_array_equal(m[1, :, 3], 1.0)   # per-layer support
+    assert float(m.sum()) == 2 * 4 * 6 - 3 * 4
+
+
+def test_column_masks_stacked_axis1_and_negative():
+    """axis=1 (and its negative alias -1): the max runs over the LAST dim,
+    prunable structures are the rows of the trailing slice."""
+    x = np.ones((2, 4, 6), np.float32)
+    x[0, 2, :] = 0.0            # layer 0, row 2 dead
+    params = {"w": jnp.asarray(x)}
+    for ax in (1, -1):
+        specs = (ProjectionSpec(pattern=r"w", norm="l1inf", radius=1.0,
+                                axis=ax),)
+        m = np.asarray(column_masks(params, specs)["w"])
+        np.testing.assert_array_equal(m[0, 2, :], 0.0)
+        assert float(m.sum()) == 2 * 4 * 6 - 6, f"axis={ax}"
+
+
+def test_column_masks_2d_negative_axis():
+    x = np.ones((4, 6), np.float32)
+    x[:, 2] = 0.0
+    params = {"w": jnp.asarray(x)}
+    for ax in (0, -2):          # -2 aliases 0 on a 2-D leaf
+        specs = (ProjectionSpec(pattern=r"w", norm="l1inf", radius=1.0,
+                                axis=ax),)
+        m = np.asarray(column_masks(params, specs)["w"])
+        np.testing.assert_array_equal(m[:, 2], 0.0)
+        assert float(m.sum()) == 4 * 6 - 4, f"axis={ax}"
+
+
+def test_sparsity_report_stacked_and_axis1():
+    params = {"blocks": {"w": _stacked_leaf()}}
+    specs = (ProjectionSpec(pattern=r"blocks/w", norm="l1inf", radius=1.0,
+                            axis=0),)
+    rep = sparsity_report(params, specs)
+    assert rep["blocks/w"] == pytest.approx(100.0 * 3 / 12)
+
+    x = np.ones((2, 4, 6), np.float32)
+    x[0, 2, :] = 0.0
+    x[1, 0, :] = 0.0
+    x[1, 3, :] = 0.0
+    specs1 = (ProjectionSpec(pattern=r"w", norm="l1inf", radius=1.0,
+                             axis=1),)
+    rep1 = sparsity_report({"w": jnp.asarray(x)}, specs1)
+    assert rep1["w"] == pytest.approx(100.0 * 3 / 8)
+
+    # negative axis alias agrees
+    repn = sparsity_report({"w": jnp.asarray(x)},
+                           (dataclasses.replace(specs1[0], axis=-1),))
+    assert repn["w"] == rep1["w"]
+
+
+def test_masks_match_projection_support_after_projection():
+    """End-to-end: project, then the mask's zero pattern equals the actual
+    column support on every leaf shape (2-D, stacked, axis=1)."""
+    params = _params(7)
+    out, _ = apply_constraints_packed(
+        params, tuple(dataclasses.replace(s, radius=0.5) for s in SPECS))
+    specs = tuple(dataclasses.replace(s, radius=0.5) for s in SPECS)
+    masks = column_masks(out, specs)
+    w = np.asarray(out["blocks"]["mlp_w1"])
+    m = np.asarray(masks["blocks"]["mlp_w1"])
+    dead = np.all(w == 0, axis=1)               # (3, 40) per-layer columns
+    np.testing.assert_array_equal(m.transpose(0, 2, 1).all(axis=2), ~dead)
+    w2 = np.asarray(out["enc1"]["w"])
+    m2 = np.asarray(masks["enc1"]["w"])
+    dead2 = np.all(w2 == 0, axis=1)             # axis=1 spec: max over cols
+    np.testing.assert_array_equal(m2.all(axis=1), ~dead2)

@@ -3,7 +3,10 @@
 
 Verifies: (a) the sharded train step matches the single-device step
 numerically, (b) the dry-run machinery (lower+compile+roofline parse) works
-end-to-end on a small mesh, (c) sequence-parallel decode matches unsharded.
+end-to-end on a small mesh, (c) the sharded packed projection keeps FSDP
+shards resident (zero all-gathers in its HLO; theta equals the gathered
+solve) and turning projection on adds no full-weight all-gather to the
+production train cell.
 """
 import json
 import os
@@ -34,7 +37,8 @@ def test_sharded_train_step_matches_single_device():
         from repro.configs import get_reduced
         from repro.models.zoo import build, make_batch
         from repro.launch.steps import (build_train_step, param_shardings,
-                                        batch_shardings, opt_shardings)
+                                        batch_shardings, opt_shardings,
+                                        projection_engine_for)
         from repro.dist.sharding import default_rules
         from repro.optim import AdamConfig, adam_init
 
@@ -45,12 +49,15 @@ def test_sharded_train_step_matches_single_device():
         acfg = AdamConfig(lr=1e-3)
         opt = adam_init(params, acfg)
 
-        # single device reference
+        # single device reference (solver: newton)
+        engine_ref = projection_engine_for(cfg, None)
+        proj0 = engine_ref.init_state(params)
         step_ref = build_train_step(model, None, None, acfg,
                                     with_projection=True)
-        loss_ref, _, p_ref, _ = jax.jit(step_ref)(params, opt, batch)
+        loss_ref, _, p_ref, _, _ = jax.jit(step_ref)(params, opt, proj0,
+                                                     batch)
 
-        # 2x4 mesh
+        # 2x4 mesh (solver: sharded — shard_map segmented Newton)
         mesh = jax.make_mesh((4, 2), ("data", "model"),
                              axis_types=(jax.sharding.AxisType.Auto,)*2)
         rules = default_rules()
@@ -58,12 +65,15 @@ def test_sharded_train_step_matches_single_device():
         p_sh = param_shardings(model, mesh, rules)
         params_s = jax.device_put(params, p_sh)
         opt_s = jax.device_put(opt, opt_shardings(p_sh, mesh))
+        proj_s = jax.device_put(proj0, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), proj0))
         batch_s = jax.device_put(batch, batch_shardings(
             jax.tree_util.tree_map(lambda x: x, batch), mesh, rules))
         step = build_train_step(model, mesh, rules, acfg,
                                 with_projection=True)
         with mesh:
-            loss_s, _, p_s, _ = jax.jit(step)(params_s, opt_s, batch_s)
+            loss_s, _, p_s, _, th_s = jax.jit(step)(params_s, opt_s, proj_s,
+                                                    batch_s)
 
         print("LOSS", float(loss_ref), float(loss_s))
         assert abs(float(loss_ref) - float(loss_s)) < 2e-2, (
@@ -111,3 +121,109 @@ def test_dryrun_machinery_small_mesh():
     assert "OK" in out
     # sharded cells must actually communicate
     assert "all-reduce" in out or "all-gather" in out
+
+
+def test_sharded_projection_keeps_shards_resident():
+    """The sharded packed projection of FSDP-sharded leaves must contain NO
+    all-gather in its lowered HLO (the reshard to the canonical column
+    layout is an all-to-all), and its theta / outputs must equal the
+    gathered single-buffer solve."""
+    out = _run_subprocess("""
+        import re
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import (ProjectionSpec, ProjectionEngine,
+                                init_projection_state)
+
+        rng = np.random.default_rng(0)
+        params = {
+            # FSDP style: rows (the max axis) sharded over "data"
+            "blocks": {"w1": jnp.asarray(rng.normal(size=(4, 64, 256)),
+                                         jnp.float32)},
+            "enc": {"w": jnp.asarray(rng.normal(size=(128, 512)),
+                                     jnp.float32)},
+        }
+        specs = (ProjectionSpec(pattern=r"w1$", norm="l1inf", radius=16.0),
+                 ProjectionSpec(pattern=r"enc/w", norm="l1inf", radius=8.0))
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = {
+            "blocks": {"w1": NamedSharding(mesh, P(None, "data", None))},
+            "enc": {"w": NamedSharding(mesh, P("data", None))},
+        }
+        params_s = jax.device_put(params, sh)
+        state0 = init_projection_state(params, specs)
+
+        eng = ProjectionEngine(specs, solver="sharded", mesh=mesh)
+        fn = jax.jit(lambda p, s: eng.apply(p, state=s))
+        with mesh:
+            lowered = fn.lower(params_s, state0)
+            hlo = lowered.compile().as_text()
+        ags = [l for l in hlo.splitlines() if re.search(r"all-gather", l)]
+        assert not ags, "projection HLO contains all-gather:\\n" + \
+            "\\n".join(ags[:5])
+        assert "all-to-all" in hlo  # the reshard really is an all-to-all
+
+        with mesh:
+            out_s, st_s = fn(params_s, state0)
+        ref_eng = ProjectionEngine(specs)  # gathered single-buffer solve
+        out_r, st_r = ref_eng.apply(params, state=state0)
+        for a, b in zip(jax.tree_util.tree_leaves(out_r),
+                        jax.tree_util.tree_leaves(out_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+        k = list(st_r)[0]
+        np.testing.assert_allclose(np.asarray(st_r[k]), np.asarray(st_s[k]),
+                                   rtol=1e-6, atol=1e-6)
+        print("THETA", np.asarray(st_s[k])[:3])
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_train_cell_projection_adds_no_full_weight_allgather():
+    """lower_cell train HLO on an FSDP mesh: turning the projection ON must
+    not add any all-gather at full-weight size (the sharded engine moves
+    shards with all-to-all and statistics with psum)."""
+    out = _run_subprocess("""
+        import re
+        import numpy as np, jax
+        from repro.configs import get_reduced
+        from repro.models.zoo import build
+        from repro.launch.steps import lower_cell
+        import repro.models.zoo as zoo
+
+        zoo.SHAPES["train_4k"] = dict(seq=64, batch=8, kind="train")
+        cfg = get_reduced("gemma_7b")
+        model = build(cfg)
+        mesh = jax.make_mesh((8, 1), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+
+        def ag_sizes(hlo):
+            "multiset of all-gather result element counts"
+            sizes = []
+            for line in hlo.splitlines():
+                m = re.search(r"= \\S*?(f32|bf16|f16|s32|u32)"
+                              r"\\[([0-9,]*)\\][^ ]* all-gather", line)
+                if m:
+                    dims = [int(d) for d in m.group(2).split(",") if d]
+                    sizes.append(int(np.prod(dims)) if dims else 1)
+            return sizes
+
+        hlo_off = lower_cell(model, "train_4k", mesh, False,
+                             with_projection=False).compile().as_text()
+        hlo_on = lower_cell(model, "train_4k", mesh, False,
+                            with_projection=True).compile().as_text()
+        # full size of the projected leaf (stacked mlp w1)
+        from repro.core.constraints import leaf_path_str
+        flat = jax.tree_util.tree_flatten_with_path(
+            model.abstract_params())[0]
+        w1 = [l for p, l in flat
+              if re.search(r"mlp/w1$", leaf_path_str(p))][0]
+        full = int(np.prod(w1.shape))
+        big_off = sorted(s for s in ag_sizes(hlo_off) if s >= full)
+        big_on = sorted(s for s in ag_sizes(hlo_on) if s >= full)
+        print("big all-gathers off/on:", big_off, big_on)
+        assert len(big_on) <= len(big_off), (big_off, big_on)
+        print("OK")
+    """)
+    assert "OK" in out
