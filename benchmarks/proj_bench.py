@@ -281,6 +281,97 @@ def engine_report(quick: bool = True,
     return rows
 
 
+def families_report(quick: bool = True,
+                    out_path: str = "BENCH_families.json") -> List[Row]:
+    """Per-constraint-family sweep (PR 4): plain vs weighted vs bilevel at
+    the three sparsity regimes, plus the mixed-family packed contract (one
+    engine launch per family sub-buffer). Writes ``out_path`` for CI;
+    ``scripts/check.sh --bench-smoke`` gates bilevel <= 1.0x plain at the
+    high-sparsity regime (the bi-level operator drops the per-column sort,
+    so its solve must never be slower where columns die in droves).
+    """
+    from repro.core import (project_bilevel, project_l1inf_weighted,
+                            ProjectionEngine)
+
+    rng = np.random.default_rng(17)
+    reps = 30 if quick else 80
+    n, m = (256, 512) if quick else (1024, 2048)
+    payload: dict = {"meta": {"quick": quick, "shape": [n, m]}}
+    rows: List[Row] = []
+
+    scale = np.exp(rng.normal(size=(1, m)))
+    Y = jnp.asarray(rng.uniform(0, 1, size=(n, m)) * scale, jnp.float32)
+    w = jnp.asarray(np.exp(0.3 * rng.normal(size=(m,))), jnp.float32)
+    norm = float(np.abs(np.asarray(Y)).max(axis=0).sum())
+
+    regimes = []
+    for C_frac in (0.5, 0.1, 0.01):
+        C = C_frac * norm
+        plain_us = _time_call(
+            lambda: project_l1inf_newton(Y, C).block_until_ready(), reps)
+        weighted_us = _time_call(
+            lambda: project_l1inf_weighted(Y, w, C).block_until_ready(),
+            reps)
+        bilevel_us = _time_call(
+            lambda: project_bilevel(Y, C).block_until_ready(), reps)
+        colsp_plain = _sparsity(project_l1inf_newton(Y, C))
+        colsp_weighted = _sparsity(project_l1inf_weighted(Y, w, C))
+        colsp_bi = _sparsity(project_bilevel(Y, C))
+        regimes.append({
+            "C_frac": C_frac,
+            "colsp_plain_pct": colsp_plain,
+            "colsp_weighted_pct": colsp_weighted,
+            "colsp_bilevel_pct": colsp_bi,
+            "plain_us": plain_us, "weighted_us": weighted_us,
+            "bilevel_us": bilevel_us,
+            "ratio_bilevel_vs_plain": bilevel_us / plain_us,
+            "ratio_weighted_vs_plain": weighted_us / plain_us,
+        })
+        for fam, us, sp in (("plain", plain_us, colsp_plain),
+                            ("weighted", weighted_us, colsp_weighted),
+                            ("bilevel", bilevel_us, colsp_bi)):
+            rows.append((f"families/{fam}@{n}x{m}", us,
+                         f"C_frac={C_frac};colsp={sp:.1f}%"))
+    payload["regimes"] = regimes
+
+    # ---- mixed-family packed contract: one launch per family sub-buffer --
+    params = {
+        "a": jnp.asarray(rng.normal(size=(64, 128)), jnp.float32),
+        "b": jnp.asarray(rng.normal(size=(4, 32, 128)), jnp.float32),
+        "c": jnp.asarray(rng.normal(size=(64, 128)), jnp.float32),
+    }
+    specs = (ProjectionSpec(pattern=r"^a$", norm="l1inf", radius=2.0),
+             ProjectionSpec(pattern=r"^b$", norm="bilevel", radius=1.5),
+             ProjectionSpec(pattern=r"^c$", norm="l1inf_weighted",
+                            radius=3.0))
+    eng = ProjectionEngine(specs)
+    state0 = eng.init_state(params)
+    engine_counters_reset()
+    out, state1 = eng.apply(params, state=state0)
+    counts = engine_counters()
+    ref = apply_constraints(params, specs)
+    max_diff = max(float(jnp.max(jnp.abs(ref[k] - out[k]))) for k in params)
+    mixed_fn = jax.jit(lambda p, s: eng.apply(p, state=s))
+    jax.block_until_ready(mixed_fn(params, state1))
+    mixed_us = _time_call(
+        lambda: jax.block_until_ready(mixed_fn(params, state1)), reps)
+    payload["mixed"] = {
+        "families": sorted(p.family for p in eng.plans(params)[0]),
+        "launches": {k: v for k, v in counts.items() if k != "per_leaf"},
+        "one_launch_per_family": all(
+            v == 1 for k, v in counts.items() if k != "per_leaf"),
+        "max_abs_diff_vs_per_leaf": max_diff,
+        "mixed_packed_warm_us": mixed_us,
+    }
+    rows.append(("families/mixed_packed", mixed_us,
+                 f"launches={len(payload['mixed']['launches'])};"
+                 f"max_diff={max_diff:.2e}"))
+
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows
+
+
 def dist_engine_report(quick: bool = True,
                        out_path: str = "BENCH_dist_proj.json") -> List[Row]:
     """Sharded-vs-replicated packed projection on an 8-way host-device mesh.

@@ -36,6 +36,7 @@ def main() -> None:
                 n=200, m=200, radii=(0.01, 1.0))),
             ("jaxvar", lambda: proj_bench.jax_variants(n=128, m=128)),
             ("proj_engine", lambda: proj_bench.engine_report(quick=True)),
+            ("proj_families", lambda: proj_bench.families_report(quick=True)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=True)),
         ]
     else:
@@ -45,6 +46,8 @@ def main() -> None:
             ("fig3", proj_bench.fig3_size_growth),
             ("jaxvar", proj_bench.jax_variants),
             ("proj_engine", lambda: proj_bench.engine_report(quick=False)),
+            ("proj_families",
+             lambda: proj_bench.families_report(quick=False)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=False)),
             ("table1", lambda: sae_bench.table1_synthetic(full=args.full)),
             ("table2", sae_bench.table2_lung),

@@ -11,10 +11,17 @@ Public API:
     project_l1_ball / project_l12_ball / project_simplex_sort
     project_l1inf_segmented  — packed multi-ball solve (one sweep per group)
     project_l1inf_segmented_sharded — shard_map twin (psum per iteration)
+    project_bilevel          — bi-level l1,inf operator (arXiv:2407.16293),
+        linear-time; project_bilevel_ref is its sort-based exact reference
+    ConstraintFamily / register_family / get_family / family_for_norm —
+        the pluggable constraint-family registry (core.families): every
+        family rides the packed / Pallas / sharded engine machinery
+    project_segmented_family / project_segmented_family_sharded —
+        family-dispatching packed solves
     ProjectionSpec / apply_constraints / column_masks — training integration
     ProjectionEngine         — plan building + theta state + solver dispatch
         (newton | pallas | sharded) + the projected_update step core every
-        train loop builds on
+        train loop builds on; one packed solve per (family, every_k)
     apply_constraints_packed / init_projection_state  — functional shims
         over the engine (packed batching with warm-started Newton)
     engine_counters / engine_counters_reset — solver-invocation accounting
@@ -31,6 +38,12 @@ from .baselines import (project_l1inf_quattoni, project_l1inf_bejar,
 from .norms import project_l12_ball, prox_linf1, linf1_norm, l12_norm
 from .masked import project_l1inf_masked, l1inf_column_mask
 from .weighted import project_l1inf_weighted, l1inf_weighted_norm
+from .bilevel import (project_bilevel, project_bilevel_stats,
+                      project_bilevel_ref, bilevel_norm)
+from .families import (ConstraintFamily, register_family, get_family,
+                       family_for_norm, family_names, packable_norms,
+                       project_segmented_family,
+                       project_segmented_family_sharded)
 from .constraints import (ProjectionSpec, apply_constraints,
                           build_packed_plans, column_masks, apply_masks,
                           sparsity_report, engine_counters,

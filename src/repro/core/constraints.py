@@ -7,15 +7,18 @@ stacked experts) are vmapped over their leading dims so the constraint applies
 per layer / per expert.
 
 Packed multi-tensor batching: instead of one projection launch per matching
-weight matrix, every l1,inf-family leaf is canonicalized (max axis -> 0),
-lane-padded, and concatenated into ONE (n_max, sum m) buffer with a
-per-column segment id; a stacked (L, n, m) leaf contributes L segments, so
-the packing subsumes the per-layer vmap. The whole group is projected by
-``project_l1inf_segmented`` in a single fused sweep — one compile, one
-launch, one HBM pass per train step — and unpacked exactly (slicing off
-padding). Per-segment radii ride in a C vector, so specs with different
-radii still share one launch. A per-plan theta vector threads through the
-train state as next step's Newton warm start.
+weight matrix, every leaf of a registered constraint family
+(``core.families``) is canonicalized (max axis -> 0), lane-padded, and
+concatenated into ONE (n_max, sum m) buffer per (family, every_k) pair with
+a per-column segment id; a stacked (L, n, m) leaf contributes L segments,
+so the packing subsumes the per-layer vmap. Each family sub-buffer is
+projected by ``families.project_segmented_family`` in a single fused sweep
+— one compile, one launch, one HBM pass per family per train step — and
+unpacked exactly (slicing off padding). Per-segment radii ride in a C
+vector and weight-aware families a per-column w vector, so specs with
+different radii/weights still share one launch. A per-plan theta vector
+threads through the train state as next step's Newton warm start (plan
+keys isolate warm starts per family — thetas never cross families).
 
 This module owns the STATIC side of that story — specs, leaf matching, plan
 building, pack/unpack, masks/reports, and the invocation counters. The
@@ -36,19 +39,20 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .l1inf import project_l1inf_newton, project_l1inf_sorted
-from .masked import project_l1inf_masked
+from .families import family_for_norm, get_family, packable_norms
 from .norms import project_l1_ball, project_l12_ball
 
 __all__ = ["ProjectionSpec", "apply_constraints", "build_packed_plans",
            "column_masks", "apply_masks", "sparsity_report", "leaf_path_str",
            "engine_count", "engine_counters", "engine_counters_reset"]
 
-_NORMS = {"l1inf", "l1inf_sorted", "l1inf_masked", "l1", "l12"}
-# Norms that project onto the l1,inf ball itself and can share one packed
-# segmented solve (the solver choice newton-vs-sorted is irrelevant for the
-# packed engine — both are exact on the same ball).
-_PACKABLE = {"l1inf", "l1inf_sorted"}
+# spec norms: every registered constraint family's norms (which pack into
+# per-family sub-buffers) plus the per-leaf-only balls
+_EXTRA_NORMS = {"l1", "l12"}
+
+
+def _known_norms():
+    return packable_norms() | _EXTRA_NORMS
 _LANE = 128   # TPU lane width: per-matrix column padding unit
 _SUBLANE = 8  # TPU sublane: packed-buffer row padding unit
 
@@ -82,23 +86,39 @@ class ProjectionSpec:
     """One structured-sparsity constraint.
 
     pattern:  regex matched against the '/'-joined param path.
-    norm:     l1inf | l1inf_sorted | l1inf_masked | l1 | l12
+    norm:     a registered constraint-family norm (l1inf | l1inf_sorted |
+              l1inf_weighted | l1inf_masked | bilevel — see
+              ``core.families``) or a per-leaf-only ball (l1 | l12).
     radius:   ball radius C (> 0).
     axis:     the *max* axis of the trailing 2-D slice (paper: 0 — columns
               are prunable structures along the other axis).
     every_k:  apply every k optimizer steps (1 = every step).
+    weights:  per-column weights for the l1inf_weighted family (a tuple of
+              floats, one per canonical column of every matching leaf;
+              None = uniform 1.0). Stored as a static tuple so specs stay
+              hashable/trace-safe.
     """
     pattern: str
     norm: str = "l1inf"
     radius: float = 1.0
     axis: int = 0
     every_k: int = 1
+    weights: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
-        if self.norm not in _NORMS:
+        if self.norm not in _known_norms():
             raise ValueError(f"unknown norm {self.norm!r}")
         if self.radius <= 0:
             raise ValueError("radius must be > 0")
+        if self.weights is not None:
+            fam = family_for_norm(self.norm)
+            if fam is None or not fam.uses_weights:
+                raise ValueError(
+                    f"norm {self.norm!r} does not take per-column weights")
+            w = tuple(float(x) for x in self.weights)
+            if any(x <= 0 for x in w):
+                raise ValueError("weights must be > 0")
+            object.__setattr__(self, "weights", w)
 
 
 def leaf_path_str(path) -> str:
@@ -113,14 +133,27 @@ def leaf_path_str(path) -> str:
     return "/".join(parts)
 
 
-def _project_fn(norm: str) -> Callable:
-    return {
-        "l1inf": lambda x, C, axis: project_l1inf_newton(x, C, axis=axis),
-        "l1inf_sorted": lambda x, C, axis: project_l1inf_sorted(x, C, axis=axis),
-        "l1inf_masked": lambda x, C, axis: project_l1inf_masked(x, C, axis=axis),
-        "l1": lambda x, C, axis: project_l1_ball(x, C),
-        "l12": lambda x, C, axis: project_l12_ball(x, C, axis=axis),
-    }[norm]
+def _project_fn(spec: "ProjectionSpec") -> Callable:
+    """Per-leaf projection (x_2d, C, axis) -> x_2d for one spec.
+
+    Family norms dispatch through the registry (``l1inf_sorted`` keeps the
+    total-order solver on this path); l1/l12 stay hand-wired.
+    """
+    if spec.norm == "l1inf_sorted":
+        from .l1inf import project_l1inf_sorted
+        return lambda x, C, axis: project_l1inf_sorted(x, C, axis=axis)
+    if spec.norm == "l1":
+        return lambda x, C, axis: project_l1_ball(x, C)
+    if spec.norm == "l12":
+        return lambda x, C, axis: project_l12_ball(x, C, axis=axis)
+    fam = family_for_norm(spec.norm)
+    w = spec.weights
+
+    def fn(x, C, axis):
+        wj = None if w is None else jnp.asarray(w, jnp.float32)
+        return fam.project_leaf(x, C, axis=axis, w=wj)
+
+    return fn
 
 
 def _apply_2d(fn: Callable, x: jnp.ndarray, C: float, axis: int) -> jnp.ndarray:
@@ -139,6 +172,14 @@ def _first_match(specs: Sequence[ProjectionSpec], name: str, leaf):
     for spec in specs:
         if re.search(spec.pattern, name) and hasattr(leaf, "ndim") \
                 and leaf.ndim >= 2:
+            if spec.weights is not None:
+                # canonical columns = the non-max axis of the trailing slice
+                m = leaf.shape[-2 if spec.axis in (1, -1) else -1]
+                if len(spec.weights) != m:
+                    raise ValueError(
+                        f"spec {spec.pattern!r}: {len(spec.weights)} weights "
+                        f"for a leaf with {m} canonical columns "
+                        f"(shape {tuple(leaf.shape)})")
             return spec
     return None
 
@@ -169,7 +210,7 @@ def apply_constraints(params: Any, specs: Sequence[ProjectionSpec],
         out = leaf
         if spec is not None:
             engine_count("per_leaf")
-            fn = _project_fn(spec.norm)
+            fn = _project_fn(spec)
             projected = _apply_2d(fn, out, spec.radius, spec.axis)
             out = _gated(projected, out, step, spec.every_k)
         leaves.append(out)
@@ -193,17 +234,26 @@ class _PackedEntry:
     m_pad: int                 # m padded up to the lane multiple
     col_start: int             # first column in the packed buffer
     seg_start: int             # first segment id
+    weights: Optional[Tuple[float, ...]] = None   # per canonical column
 
 
 @dataclasses.dataclass(frozen=True)
 class PackedPlan:
-    """Static packing layout for one group of same-``every_k`` l1inf leaves."""
+    """Static packing layout for one (family, every_k) sub-buffer.
+
+    Mixed-family spec lists split into one plan — one packed solve — per
+    constraint family (``core.families``): families differ in their
+    per-column Newton statistics and their thetas live on different scales,
+    so segments never mix across families, but everything of ONE family
+    with one ``every_k`` still solves in a single fused sweep.
+    """
     key: str
     every_k: int
     n_max: int                 # padded row count of the packed buffer
     total_cols: int
     num_segments: int
     entries: Tuple[_PackedEntry, ...]
+    family: str = "l1inf"
 
     def seg_ids(self) -> np.ndarray:
         """Per-column segment id; ``num_segments`` marks lane padding."""
@@ -220,27 +270,43 @@ class PackedPlan:
             C[e.seg_start : e.seg_start + e.lead] = e.radius
         return C
 
+    def col_weights(self) -> np.ndarray:
+        """Per-column weight vector of the packed buffer (1.0 on lane
+        padding and on entries without spec weights) — the ``w_col`` input
+        of weight-aware families; stacked matrices repeat their weights."""
+        w = np.ones((self.total_cols,), np.float32)
+        for e in self.entries:
+            if e.weights is None:
+                continue
+            for l in range(e.lead):
+                lo = e.col_start + l * e.m_pad
+                w[lo : lo + e.m] = np.asarray(e.weights, np.float32)
+        return w
+
 
 def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
-    """Split the leaves into packed plans (l1inf family, grouped by every_k)
-    and a per-leaf remainder [(leaf_index, spec)]. Pure shape bookkeeping —
-    safe to call during tracing (shapes are static)."""
+    """Split the leaves into packed plans — one per (constraint family,
+    every_k) pair — and a per-leaf remainder [(leaf_index, spec)] for the
+    unpackable balls (l1, l12). Pure shape bookkeeping — safe to call
+    during tracing (shapes are static)."""
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    groups: Dict[int, list] = {}
+    groups: Dict[Tuple[str, int], list] = {}
     per_leaf = []
     for i, (path, leaf) in enumerate(flat):
         spec = _first_match(specs, leaf_path_str(path), leaf)
         if spec is None:
             continue
-        if spec.norm in _PACKABLE:
-            groups.setdefault(spec.every_k, []).append((i, leaf, spec))
+        fam = family_for_norm(spec.norm)
+        if fam is not None:
+            groups.setdefault((fam.name, spec.every_k), []).append(
+                (i, leaf, spec))
         else:
             per_leaf.append((i, spec))
 
     plans = []
-    for every_k in sorted(groups):
+    for family, every_k in sorted(groups):
         col, seg, entries, n_max = 0, 0, [], 0
-        for i, leaf, spec in groups[every_k]:
+        for i, leaf, spec in groups[(family, every_k)]:
             shape = tuple(leaf.shape)
             lead = int(np.prod(shape[:-2])) if len(shape) > 2 else 1
             n, m = shape[-2:]
@@ -251,14 +317,16 @@ def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
             entries.append(_PackedEntry(
                 index=i, shape=shape, lead=lead, n=n, m=m,
                 transpose=transpose, radius=float(spec.radius),
-                m_pad=m_pad, col_start=col, seg_start=seg))
+                m_pad=m_pad, col_start=col, seg_start=seg,
+                weights=spec.weights))
             col += lead * m_pad
             seg += lead
             n_max = max(n_max, n)
         n_max = -(-n_max // _SUBLANE) * _SUBLANE
         plans.append(PackedPlan(
-            key=f"l1inf_packed/k{every_k}", every_k=every_k, n_max=n_max,
-            total_cols=col, num_segments=seg, entries=tuple(entries)))
+            key=f"{family}_packed/k{every_k}", every_k=every_k, n_max=n_max,
+            total_cols=col, num_segments=seg, entries=tuple(entries),
+            family=family))
     return plans, per_leaf
 
 

@@ -33,7 +33,7 @@ import jax.numpy as jnp
 from .constraints import (ProjectionSpec, build_packed_plans, engine_count,
                           _apply_2d, _gated, _pack_entry, _project_fn,
                           _unpack_entry)
-from .l1inf import project_l1inf_segmented
+from .families import get_family, project_segmented_family
 
 __all__ = ["ProjectionEngine", "apply_constraints_packed",
            "init_projection_state"]
@@ -75,8 +75,13 @@ class ProjectionEngine:
     # -- the projection ------------------------------------------------------
 
     def _solve_plan(self, plan, leaves, theta0):
-        """One packed solve. Returns (Xpk-or-leaf-list, theta, iters)."""
+        """One packed solve of one family sub-buffer. Returns
+        (projected-by-leaf-index dict, theta, iters). The constraint family
+        named by the plan supplies the per-column Newton statistics
+        (``core.families``); a family without a fused-kernel implementation
+        falls back to the packed Newton path under solver='pallas'."""
         engine_count(f"{plan.key}/{self.solver}")
+        fam = get_family(plan.family)
         if self.solver == "sharded":
             from ..dist.projection import project_plan_sharded
             vals = [leaves[e.index] for e in plan.entries]
@@ -89,17 +94,18 @@ class ProjectionEngine:
         Ypk = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
         sids = jnp.asarray(plan.seg_ids())
         C_seg = jnp.asarray(plan.radii())
-        if self.solver == "pallas":
-            from ..kernels.l1inf.ops import project_l1inf_pallas_segmented
-            Xpk, theta = project_l1inf_pallas_segmented(
+        w_col = jnp.asarray(plan.col_weights()) if fam.uses_weights else None
+        if self.solver == "pallas" and fam.pallas_loader is not None:
+            pallas_fn = fam.pallas_loader()
+            Xpk, theta = pallas_fn(
                 Ypk, sids, C_seg, num_segments=plan.num_segments,
                 theta0=theta0,
                 interpret=jax.default_backend() != "tpu")
             iters = jnp.asarray(-1, jnp.int32)   # kernel keeps its own count
         else:
-            Xpk, theta, iters = project_l1inf_segmented(
+            Xpk, theta, iters = project_segmented_family(
                 Ypk, sids, C_seg, num_segments=plan.num_segments,
-                theta0=theta0)
+                family=plan.family, w_col=w_col, theta0=theta0)
         outs = {}
         for e in plan.entries:
             block = jax.lax.slice_in_dim(
@@ -112,9 +118,11 @@ class ProjectionEngine:
               with_stats: bool = False):
         """Project matching leaves of ``params``.
 
-        All l1,inf-family leaves of equal ``every_k`` are packed into one
-        buffer and projected by a single solve of the configured solver;
-        other norms fall back to the per-leaf path. ``state`` threads the
+        Leaves are packed into ONE buffer per (constraint family, every_k)
+        pair and each sub-buffer is projected by a single solve of the
+        configured solver — a mixed-family spec list (plain + weighted +
+        bilevel, same every_k) costs one engine invocation per family;
+        unpackable norms (l1, l12) fall back to the per-leaf path. ``state`` threads the
         per-plan theta vectors (Newton warm start) between train steps —
         pass the dict from ``init_state`` (or a previous call) and reuse
         the returned dict. ``step`` gates ``every_k > 1`` specs.
@@ -148,7 +156,7 @@ class ProjectionEngine:
 
         for i, spec in per_leaf:
             engine_count("per_leaf")
-            fn = _project_fn(spec.norm)
+            fn = _project_fn(spec)
             projected = _apply_2d(fn, leaves[i], spec.radius, spec.axis)
             leaves[i] = _gated(projected, leaves[i], step, spec.every_k)
 

@@ -1,0 +1,232 @@
+"""Constraint-family registry: pluggable balls for the ProjectionEngine.
+
+PR 3's engine hard-coded the plain l1,inf ball in every layer (packing,
+Newton, Pallas, sharded). This module turns that single code path into a
+registry of ``ConstraintFamily`` records so every ball that factors through
+a per-column threshold rides the SAME machinery — packing with per-family
+sub-buffers (``core.constraints``), warm-started segmented Newton
+(``core.l1inf._segmented_solve``), the Pallas engine (``kernels/l1inf``),
+and the shard_map solve (``dist.projection``) — for free.
+
+A family declares (DESIGN.md §8):
+
+  * ``norms``        — the ``ProjectionSpec.norm`` strings it serves;
+  * ``seg_ops``      — the per-column segmented-Newton statistics hooks
+                       (the ``core.l1inf._PlainSegOps`` contract: prepare /
+                       stats / stats0 / colnorm / death / finalize). Because
+                       every hook is per-column given the shared theta, the
+                       SAME ops power the local, packed, and sharded solves;
+  * ``norm_fn``      — the constraint norm (feasibility test);
+  * ``project_leaf`` — the per-matrix projection (per-leaf fallback path);
+  * ``reference``    — an independent exact reference (tests/benches);
+  * ``pallas_loader``— optional: lazily imports the fused-kernel packed
+                       solver (None -> the packed Newton path is used even
+                       when the engine is configured for Pallas);
+  * ``uses_weights`` — whether ``ProjectionSpec.weights`` feeds a packed
+                       per-column weight vector into the solve.
+
+Registered families: ``l1inf`` (plain, also serving ``l1inf_sorted``
+specs), ``l1inf_weighted`` (Perez et al. 2022-style column weights),
+``l1inf_masked`` (paper Eq. 20 — plain support, unclipped magnitudes), and
+``bilevel`` (arXiv:2407.16293 — Eq. (19) restricted to k = 1, linear time).
+
+Warm-start semantics are family-uniform: each packed plan threads one
+theta per segment; any theta0 >= 0 is repaired by the bootstrap step, so
+states may be exchanged across solvers (newton | pallas | sharded) of the
+same family but MUST NOT cross families (their thetas live on different
+scales — e.g. the weighted theta multiplies w_j). The per-(family,
+every_k) plan keys enforce that separation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .l1inf import (_PlainSegOps, _segmented_solve, l1inf_norm,
+                    project_l1inf_newton, project_l1inf_sorted)
+from .weighted import (_WeightedSegOps, l1inf_weighted_norm,
+                       project_l1inf_weighted)
+from .masked import _MaskedSegOps, project_l1inf_masked
+from .bilevel import _BilevelSegOps, project_bilevel, project_bilevel_ref
+
+__all__ = [
+    "ConstraintFamily",
+    "register_family",
+    "get_family",
+    "family_for_norm",
+    "family_names",
+    "packable_norms",
+    "project_segmented_family",
+    "project_segmented_family_sharded",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConstraintFamily:
+    """One registered constraint ball (see module docstring)."""
+    name: str
+    norms: Tuple[str, ...]
+    seg_ops: object
+    norm_fn: Callable
+    project_leaf: Callable           # (Y, C, axis, w) -> X
+    reference: Callable              # (Y, C, axis, w) -> X (independent)
+    pallas_loader: Optional[Callable] = None
+    uses_weights: bool = False
+
+
+_REGISTRY: Dict[str, ConstraintFamily] = {}
+_NORM_TO_FAMILY: Dict[str, str] = {}
+
+
+def register_family(fam: ConstraintFamily) -> ConstraintFamily:
+    """Register ``fam`` under its name and each of its spec norms.
+
+    Re-registering a name replaces it (norm bindings follow, and norms the
+    replacement no longer declares are unbound); a norm string already
+    claimed by a DIFFERENT family is an error.
+    """
+    for norm in fam.norms:
+        owner = _NORM_TO_FAMILY.get(norm)
+        if owner is not None and owner != fam.name:
+            raise ValueError(
+                f"norm {norm!r} is already served by family {owner!r}")
+    for norm, owner in list(_NORM_TO_FAMILY.items()):
+        if owner == fam.name and norm not in fam.norms:
+            del _NORM_TO_FAMILY[norm]
+    _REGISTRY[fam.name] = fam
+    for norm in fam.norms:
+        _NORM_TO_FAMILY[norm] = fam.name
+    return fam
+
+
+def get_family(name: str) -> ConstraintFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown constraint family {name!r} "
+            f"(registered: {family_names()})") from None
+
+
+def family_for_norm(norm: str) -> Optional[ConstraintFamily]:
+    """The family serving a spec norm, or None (l1/l12 stay per-leaf)."""
+    name = _NORM_TO_FAMILY.get(norm)
+    return _REGISTRY[name] if name is not None else None
+
+
+def family_names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def packable_norms() -> frozenset:
+    """Every spec norm that packs into a family sub-buffer."""
+    return frozenset(_NORM_TO_FAMILY)
+
+
+# ---------------------------------------------------------------------------
+# packed segmented solves, family-dispatched
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "family",
+                                             "max_iter"))
+def project_segmented_family(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg, *,
+                             num_segments: int, family: str = "l1inf",
+                             w_col: Optional[jnp.ndarray] = None,
+                             theta0: Optional[jnp.ndarray] = None,
+                             max_iter: int = 32):
+    """Family-dispatching twin of ``project_l1inf_segmented``: project each
+    column group of a packed (n, M) buffer onto its own ball of the named
+    family. ``w_col`` (M,) carries per-column weights for weight-aware
+    families (ignored otherwise). Returns (X, theta_seg, iters)."""
+    fam = get_family(family)
+    return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
+                            max_iter, ops=fam.seg_ops,
+                            w_col=w_col if fam.uses_weights else None)
+
+
+def project_segmented_family_sharded(Y: jnp.ndarray, seg_ids: jnp.ndarray,
+                                     C_seg, *, num_segments: int,
+                                     axis_names: Tuple[str, ...],
+                                     family: str = "l1inf",
+                                     w_col: Optional[jnp.ndarray] = None,
+                                     theta0: Optional[jnp.ndarray] = None,
+                                     contrib: Optional[jnp.ndarray] = None,
+                                     max_iter: int = 32):
+    """Sharded twin of ``project_segmented_family`` — call inside shard_map
+    (the ``project_l1inf_segmented_sharded`` contract: one (num_segments,)
+    psum per Eq.-(19) evaluation, shards never leave their rank)."""
+    fam = get_family(family)
+    return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
+                            max_iter, axis_names=tuple(axis_names),
+                            contrib=contrib, ops=fam.seg_ops,
+                            w_col=w_col if fam.uses_weights else None)
+
+
+# ---------------------------------------------------------------------------
+# the built-in families
+# ---------------------------------------------------------------------------
+
+def _load_plain_pallas():
+    from ..kernels.l1inf.ops import project_l1inf_pallas_segmented
+    return project_l1inf_pallas_segmented
+
+
+def _load_bilevel_pallas():
+    from ..kernels.l1inf.ops import project_bilevel_pallas_segmented
+    return project_bilevel_pallas_segmented
+
+
+register_family(ConstraintFamily(
+    name="l1inf",
+    norms=("l1inf", "l1inf_sorted"),
+    seg_ops=_PlainSegOps,
+    norm_fn=lambda Y, axis=0, w=None: l1inf_norm(Y, axis=axis),
+    project_leaf=lambda Y, C, axis=0, w=None:
+        project_l1inf_newton(Y, C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None:
+        project_l1inf_sorted(Y, C, axis=axis),
+    pallas_loader=_load_plain_pallas,
+))
+
+register_family(ConstraintFamily(
+    name="l1inf_weighted",
+    norms=("l1inf_weighted",),
+    seg_ops=_WeightedSegOps,
+    norm_fn=lambda Y, axis=0, w=None: l1inf_weighted_norm(
+        Y, jnp.ones((Y.shape[1 if axis in (0, -2) else 0],), jnp.float32)
+        if w is None else jnp.asarray(w, jnp.float32), axis=axis),
+    project_leaf=lambda Y, C, axis=0, w=None: project_l1inf_weighted(
+        Y, jnp.ones((Y.shape[1 if axis in (0, -2) else 0],), jnp.float32)
+        if w is None else jnp.asarray(w, jnp.float32), C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None: project_l1inf_weighted(
+        Y, jnp.ones((Y.shape[1 if axis in (0, -2) else 0],), jnp.float32)
+        if w is None else jnp.asarray(w, jnp.float32), C, axis=axis),
+    uses_weights=True,
+))
+
+register_family(ConstraintFamily(
+    name="l1inf_masked",
+    norms=("l1inf_masked",),
+    seg_ops=_MaskedSegOps,
+    norm_fn=lambda Y, axis=0, w=None: l1inf_norm(Y, axis=axis),
+    project_leaf=lambda Y, C, axis=0, w=None:
+        project_l1inf_masked(Y, C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None:
+        project_l1inf_masked(Y, C, axis=axis),
+))
+
+register_family(ConstraintFamily(
+    name="bilevel",
+    norms=("bilevel",),
+    seg_ops=_BilevelSegOps,
+    norm_fn=lambda Y, axis=0, w=None: l1inf_norm(Y, axis=axis),
+    project_leaf=lambda Y, C, axis=0, w=None:
+        project_bilevel(Y, C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None:
+        project_bilevel_ref(Y, C, axis=axis),
+    pallas_loader=_load_bilevel_pallas,
+))

@@ -348,12 +348,62 @@ def project_l1inf_newton_stats(Y: jnp.ndarray, C, axis: int = 0,
 # segmented Newton: many independent balls in one packed buffer
 # -----------------------------------------------------------------------------
 
+class _PlainSegOps:
+    """Per-column statistics of the PLAIN l1,inf family for the segmented
+    Newton solver — the reference implementation of the ``seg_ops`` contract
+    every constraint family provides (see ``core.families`` / DESIGN.md §8):
+
+      prepare(A, w)       -> aux pytree (per-column sort/prefix state)
+      stats(aux, th_col)  -> (a, b, active, mu): per-column Eq.-(19)
+                             numerator/denominator contributions, the
+                             active flag, and the water level at th_col
+      stats0(aux)         -> (a, b) at theta = 0 in closed form (cold start)
+      colnorm(aux)        -> per-column contribution to the constraint norm
+      death(aux)          -> per-column theta at which the column dies
+                             (the C <= 0 norm-removal threshold)
+      finalize(Ydt, A, mu)-> projected output before inside/zero gating
+
+    All hooks are per-column given the shared theta, so the same ops run
+    unchanged inside ``shard_map`` (rows resident, columns sharded).
+    """
+    uses_weights = False
+
+    @staticmethod
+    def prepare(A, w=None):
+        Z, S, b = _sorted_stats(A)
+        return {"S": S, "b": b, "colmax": Z[0], "colsum": S[-1]}
+
+    @staticmethod
+    def stats(aux, th_col):
+        k, S_k, active = _theta_state(aux["S"], aux["b"], th_col)
+        mu = jnp.maximum((S_k - th_col) / k, 0.0)
+        return S_k / k, 1.0 / k, active, mu
+
+    @staticmethod
+    def stats0(aux):
+        return aux["colmax"], jnp.ones_like(aux["colmax"])
+
+    @staticmethod
+    def colnorm(aux):
+        return aux["colmax"]
+
+    @staticmethod
+    def death(aux):
+        return aux["colsum"]
+
+    @staticmethod
+    def finalize(Ydt, A, mu):
+        return jnp.sign(Ydt) * jnp.minimum(A, mu[None, :])
+
+
 def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
                      num_segments: int,
                      theta0: Optional[jnp.ndarray],
                      max_iter: int,
                      axis_names: Tuple[str, ...] = (),
-                     contrib: Optional[jnp.ndarray] = None):
+                     contrib: Optional[jnp.ndarray] = None,
+                     ops=None,
+                     w_col: Optional[jnp.ndarray] = None):
     """Shared body of the segmented Newton solve (local and sharded forms).
 
     With ``axis_names`` empty this is the single-buffer solve. With
@@ -370,15 +420,23 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
     does not divide) must be summed exactly once, so only rank 0 sets its
     contrib bit; the clip/identity output math still runs on every rank
     (it is pure per-column given the shared theta).
+
+    ``ops`` selects the constraint family's per-column statistics (the
+    ``_PlainSegOps`` contract; default: plain l1,inf) and ``w_col`` (M,)
+    carries the per-column weights for weight-aware families.
     """
     if Y.ndim != 2:
         raise ValueError("packed buffer must be 2-D")
+    if ops is None:
+        ops = _PlainSegOps
     dt = jnp.promote_types(Y.dtype, jnp.float32)
     A = jnp.abs(Y.astype(dt))
     n, M = A.shape
     G = int(num_segments)
     seg_ids = jnp.asarray(seg_ids, jnp.int32)
     C_seg = jnp.asarray(C_seg, dt)
+    if w_col is not None:
+        w_col = jnp.asarray(w_col, dt)
     tiny = jnp.finfo(dt).tiny
 
     def allsum(v):
@@ -387,17 +445,24 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
     def allmax(v):
         return jax.lax.pmax(v, axis_names) if axis_names else v
 
-    Z, S, b = _sorted_stats(A)
-    colmax = Z[0]
+    aux = ops.prepare(A, w_col)
     valid = seg_ids < G
     own = valid if contrib is None else jnp.logical_and(valid, contrib)
     sum_seg = functools.partial(jax.ops.segment_sum, segment_ids=seg_ids,
                                 num_segments=G + 1)
-    norm_seg = allsum(sum_seg(jnp.where(own, colmax, 0.0))[:G])
-    m_seg = allsum(sum_seg(own.astype(dt))[:G])
+    # one stacked psum for the pre-loop per-segment state: the family's
+    # constraint norm plus the closed-form theta=0 Eq.-(19) stats (for the
+    # plain family: norm, norm, column count)
+    a0, b0 = ops.stats0(aux)
+    pre = allsum(jnp.stack([
+        sum_seg(jnp.where(own, ops.colnorm(aux), 0.0))[:G],
+        sum_seg(jnp.where(own, a0, 0.0))[:G],
+        sum_seg(jnp.where(own, b0, 0.0))[:G],
+    ]))
+    norm_seg, num0, den0 = pre[0], pre[1], pre[2]
 
     Csafe = jnp.where(C_seg > 0, C_seg, jnp.ones_like(C_seg))
-    cold = jnp.maximum((norm_seg - Csafe) / jnp.maximum(m_seg, 1.0), 0.0)
+    cold = jnp.maximum((num0 - Csafe) / jnp.maximum(den0, 1.0), 0.0)
     if theta0 is None:
         start = cold
     else:
@@ -409,13 +474,13 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
 
     def eval_step(th_seg):
         th_col = theta_cols(th_seg)
-        k, S_k, active = _theta_state(S, b, th_col)
+        a, b_, active, mu = ops.stats(aux, th_col)
         active = jnp.logical_and(active, valid)
         counted = jnp.logical_and(active, own)
-        Aa = allsum(sum_seg(jnp.where(counted, S_k / k, 0.0))[:G])
-        Ba = allsum(sum_seg(jnp.where(counted, 1.0 / k, 0.0))[:G])
+        Aa = allsum(sum_seg(jnp.where(counted, a, 0.0))[:G])
+        Ba = allsum(sum_seg(jnp.where(counted, b_, 0.0))[:G])
         new = (Aa - Csafe) / jnp.maximum(Ba, tiny)
-        mu = jnp.where(active, jnp.maximum((S_k - th_col) / k, 0.0), 0.0)
+        mu = jnp.where(active, mu, 0.0)
         return new, mu
 
     # NOTE: this outer loop is the jnp twin of the Pallas engine's in
@@ -446,7 +511,7 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
                       lambda: eval_step(theta)[1],
                       lambda: mu)
 
-    X = jnp.sign(Y.astype(dt)) * jnp.minimum(A, mu[None, :])
+    X = ops.finalize(Y.astype(dt), A, mu)
     inside_seg = norm_seg <= C_seg
     zero_seg = C_seg <= 0
     ext_b = jnp.concatenate([inside_seg, jnp.array([True])])
@@ -458,7 +523,8 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
 
     # max is idempotent, so replicated columns need no ownership mask here
     seg_max = allmax(jax.ops.segment_max(
-        jnp.where(valid, S[n - 1], 0.0), seg_ids, num_segments=G + 1)[:G])
+        jnp.where(valid, ops.death(aux), 0.0), seg_ids,
+        num_segments=G + 1)[:G])
     theta_out = jnp.where(zero_seg, seg_max,
                           jnp.where(inside_seg, 0.0, theta))
     return X.astype(Y.dtype), theta_out, iters

@@ -3,6 +3,12 @@
 Keeps the original magnitudes but zeroes exactly the support removed by the
 real projection: X = Y if inside the ball, else Y * sign(P(|Y|)). Only whole
 dominated columns (mu_j = 0) are zeroed; surviving entries are NOT clipped.
+
+Both public entry points share ONE Newton solve (``_masked_solve``): the
+column mask is derived from the water level mu of the same
+``project_l1inf_newton_stats`` call that defines the projection — callers
+needing the projection AND its mask no longer pay two solves, and the two
+functions can never disagree on ties.
 """
 from __future__ import annotations
 
@@ -11,22 +17,49 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .l1inf import project_l1inf_newton, l1inf_norm
+from .l1inf import (l1inf_norm, project_l1inf_newton_stats, _PlainSegOps,
+                    _prep, _post)
 
 __all__ = ["project_l1inf_masked", "l1inf_column_mask"]
+
+
+class _MaskedSegOps(_PlainSegOps):
+    """Segmented-Newton hooks of the masked family: identical Eq.-(19)
+    statistics to the plain family (same theta, same support), but the
+    output map keeps surviving columns UNCLIPPED — finalize multiplies by
+    the column-survival indicator instead of clamping at mu."""
+
+    @staticmethod
+    def finalize(Ydt, A, mu):
+        return Ydt * (mu > 0.0)[None, :]
+
+
+def _masked_solve(Y: jnp.ndarray, C, axis: int):
+    """One Newton solve -> (X_masked, alive) on the canonical layout.
+
+    ``alive`` is the per-column support of the TRUE projection P(|Y|)
+    (inside the ball that projection is |Y| itself, so the mask degrades
+    to the plain column support); ``X_masked`` is Y on surviving columns,
+    0 on dead ones, with the inside-ball identity gate applied.
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    P, _ = project_l1inf_newton_stats(jnp.abs(Yt), C, axis=0)
+    alive = jnp.any(P > 0, axis=0)
+    inside = l1inf_norm(Yt, axis=0) <= C
+    X = jnp.where(inside, Yt, Yt * alive[None, :])
+    return _post(X, Y, transpose), alive, transpose
 
 
 @functools.partial(jax.jit, static_argnames=("axis",))
 def l1inf_column_mask(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
     """Boolean per-column mask: True for columns surviving P_{B_{1,inf}^C}."""
-    P = project_l1inf_newton(jnp.abs(Y), C, axis=axis)
-    return jnp.any(P > 0, axis=axis)
+    _, alive, _ = _masked_solve(Y, C, axis)
+    return alive
 
 
 @functools.partial(jax.jit, static_argnames=("axis",))
 def project_l1inf_masked(Y: jnp.ndarray, C, axis: int = 0) -> jnp.ndarray:
     """Masked projection P^M (Eq. 20)."""
-    inside = l1inf_norm(Y, axis=axis) <= C
-    P = project_l1inf_newton(jnp.abs(Y), C, axis=axis)
-    masked = Y * jnp.sign(P)
-    return jnp.where(inside, Y, masked)
+    X, _, _ = _masked_solve(Y, C, axis)
+    return X

@@ -25,7 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .l1inf import _sorted_stats, _prep, _post
+from .l1inf import _sorted_stats, _theta_state, _prep, _post
 
 __all__ = ["project_l1inf_weighted", "l1inf_weighted_norm"]
 
@@ -37,14 +37,50 @@ def l1inf_weighted_norm(Y: jnp.ndarray, w: jnp.ndarray,
 
 def _state(S, b, w, theta):
     """Per-column (k, S_k, active) at column thresholds theta * w_j."""
-    n = S.shape[0]
-    tw = theta * w                                   # (m,)
-    idx = jnp.sum((b < tw[None, :]).astype(jnp.int32), axis=0)
-    active = idx < n
-    k = jnp.clip(idx + 1, 1, n).astype(S.dtype)
-    S_k = jnp.take_along_axis(S, (jnp.clip(idx, 0, n - 1))[None, :],
-                              axis=0)[0]
-    return k, S_k, active
+    return _theta_state(S, b, theta * w)
+
+
+class _WeightedSegOps:
+    """Segmented-Newton hooks of the weighted family (the ``_PlainSegOps``
+    contract of ``core.l1inf``): each column sees its own threshold
+    theta * w_j, and the Eq.-(19) tangent carries w_j (numerator) and
+    w_j^2 (denominator) factors — the slopes of the module docstring.
+    ``w_col`` is the packed per-column weight vector (1.0 on padding lanes);
+    all statistics stay per-column, so the same ops run inside shard_map.
+    """
+    uses_weights = True
+
+    @staticmethod
+    def prepare(A, w=None):
+        if w is None:
+            w = jnp.ones((A.shape[1],), A.dtype)
+        Z, S, b = _sorted_stats(A)
+        return {"S": S, "b": b, "w": w, "colmax": Z[0], "colsum": S[-1]}
+
+    @staticmethod
+    def stats(aux, th_col):
+        w = aux["w"]
+        tw = th_col * w
+        k, S_k, active = _theta_state(aux["S"], aux["b"], tw)
+        mu = jnp.maximum((S_k - tw) / k, 0.0)
+        return w * S_k / k, w * w / k, active, mu
+
+    @staticmethod
+    def stats0(aux):
+        return aux["w"] * aux["colmax"], aux["w"] * aux["w"]
+
+    @staticmethod
+    def colnorm(aux):
+        return aux["w"] * aux["colmax"]
+
+    @staticmethod
+    def death(aux):
+        # column j dies once theta * w_j >= ||y_j||_1
+        return aux["colsum"] / aux["w"]
+
+    @staticmethod
+    def finalize(Ydt, A, mu):
+        return jnp.sign(Ydt) * jnp.minimum(A, mu[None, :])
 
 
 @functools.partial(jax.jit, static_argnames=("axis", "max_iter"))

@@ -24,6 +24,13 @@ math identical while keeping shards resident:
 
 Theta (and hence the projected weights) match the gathered solve up to fp
 reduction order.
+
+Family dispatch (PR 4): the plan names its constraint family
+(``core.families``) and the shard_map body runs that family's per-column
+statistics — every hook is per-column given the shared theta, so plain,
+weighted, masked, and bilevel sub-buffers all keep the one-psum-per-eval
+contract; weight-aware families slice their per-column ``w_col`` vector
+rank-locally (never communicated).
 """
 from __future__ import annotations
 
@@ -39,7 +46,7 @@ from jax.experimental.shard_map import shard_map
 
 from ..core.constraints import (PackedPlan, _PackedEntry, _pack_entry,
                                 _unpack_entry, _LANE)
-from ..core.l1inf import project_l1inf_segmented_sharded
+from ..core.families import get_family, project_segmented_family_sharded
 
 __all__ = ["ShardedPlan", "shard_packed_plan", "project_plan_sharded"]
 
@@ -99,7 +106,7 @@ def shard_packed_plan(plan: PackedPlan, n_devices: int) -> ShardedPlan:
         col += e.lead * m_pad
     local = PackedPlan(key=plan.key, every_k=plan.every_k, n_max=plan.n_max,
                        total_cols=col, num_segments=plan.num_segments,
-                       entries=tuple(entries))
+                       entries=tuple(entries), family=plan.family)
     return ShardedPlan(global_plan=plan, local=local,
                        col_sharded=tuple(flags), n_devices=n_devices)
 
@@ -139,8 +146,26 @@ def project_plan_sharded(leaves: Sequence[jnp.ndarray], plan: PackedPlan,
     owned = sp.owned_cols()
     n_max = plan.n_max
     G = plan.num_segments
+    fam = get_family(plan.family)
     if theta0 is None:
         theta0 = jnp.zeros((G,), jnp.float32)
+
+    def _local_wcol(rank):
+        """This rank's slice of the packed per-column weight vector: a
+        column-sharded entry owns the contiguous GSPMD block
+        [rank*m_loc, (rank+1)*m_loc) of its global weights; replicated
+        entries carry them whole. Lane padding weights 1.0."""
+        parts = []
+        for e, sh in zip(sp.local.entries, sp.col_sharded):
+            if e.weights is None:
+                parts.append(jnp.ones((e.lead * e.m_pad,), jnp.float32))
+                continue
+            wg = jnp.asarray(e.weights, jnp.float32)
+            w_loc = (jax.lax.dynamic_slice(wg, (rank * e.m,), (e.m,))
+                     if sh else wg)
+            w_loc = jnp.pad(w_loc, (0, e.m_pad - e.m), constant_values=1.0)
+            parts.append(jnp.tile(w_loc, e.lead))
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
 
     def body(th0, *lv):
         rank = jnp.zeros((), jnp.int32)
@@ -150,10 +175,11 @@ def project_plan_sharded(leaves: Sequence[jnp.ndarray], plan: PackedPlan,
         pieces = [_pack_entry(x, e, n_max)
                   for x, e in zip(lv, sp.local.entries)]
         Ypk = jnp.concatenate(pieces, axis=1) if len(pieces) > 1 else pieces[0]
-        Xpk, theta, iters = project_l1inf_segmented_sharded(
+        w_col = _local_wcol(rank) if fam.uses_weights else None
+        Xpk, theta, iters = project_segmented_family_sharded(
             Ypk, jnp.asarray(sids), jnp.asarray(C_seg), num_segments=G,
-            axis_names=axis_names, theta0=th0, contrib=contrib,
-            max_iter=max_iter)
+            axis_names=axis_names, family=plan.family, w_col=w_col,
+            theta0=th0, contrib=contrib, max_iter=max_iter)
         outs = []
         for x, e in zip(lv, sp.local.entries):
             block = jax.lax.slice_in_dim(

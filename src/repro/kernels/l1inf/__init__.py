@@ -1,3 +1,4 @@
-from .ops import project_l1inf_pallas, project_l1inf_pallas_segmented
+from .ops import (project_l1inf_pallas, project_l1inf_pallas_segmented,
+                  project_bilevel_pallas_segmented)
 from .kernel import colstats, mu_solve, clip_apply
 from . import ref

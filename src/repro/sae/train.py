@@ -17,7 +17,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..core import ProjectionEngine, ProjectionSpec, column_masks
+from ..core import (ProjectionEngine, ProjectionSpec, column_masks,
+                    family_for_norm)
 from ..optim import AdamConfig, adam_init
 from .model import SAEConfig, sae_init, sae_loss, accuracy
 
@@ -94,8 +95,9 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
     # bounded"). Applying the unclipped masked projection every step instead
     # makes theta run away and over-prunes (support collapses; see
     # EXPERIMENTS.md §Paper-validation).
-    masked_mode = (tcfg.projection is not None
-                   and tcfg.projection.norm == "l1inf_masked")
+    fam = (family_for_norm(tcfg.projection.norm)
+           if tcfg.projection is not None else None)
+    masked_mode = fam is not None and fam.name == "l1inf_masked"
     if masked_mode:
         import dataclasses as _dc
         tcfg1 = _dc.replace(tcfg, projection=_dc.replace(

@@ -1,0 +1,480 @@
+"""Constraint-family registry: bi-level + weighted/masked families through
+the ProjectionEngine.
+
+Covers: registry semantics (lookup, norm ownership, re-registration), the
+bi-level projection exact vs its sort-based reference on adversarial shapes
+(n=1, m=1, ragged, ties, bf16) in the Newton, packed-segmented, and Pallas
+solvers, weighted-family property tests (w=1 degeneracy, joint (w, C)
+scaling invariance, KKT residuals), the masked family's single-solve
+mask/projection consistency, and the mixed-family packing contract: one
+engine invocation per (family, every_k) sub-buffer with per-family theta
+warm starts threading through ``projected_update``.
+
+The sharded twins of these checks (zero all-gathers, sharded == gathered
+theta for bilevel/weighted) live in tests/test_multidevice.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ConstraintFamily, ProjectionEngine, ProjectionSpec,
+                        apply_constraints, apply_constraints_packed,
+                        build_packed_plans, engine_counters,
+                        engine_counters_reset, family_for_norm, family_names,
+                        get_family, init_projection_state, l1inf_norm,
+                        l1inf_column_mask, l1inf_weighted_norm,
+                        packable_norms, project_bilevel, project_bilevel_ref,
+                        project_bilevel_stats, project_l1inf_masked,
+                        project_l1inf_newton, project_l1inf_weighted,
+                        project_segmented_family, register_family)
+from repro.core.families import _REGISTRY, _NORM_TO_FAMILY
+
+
+def _tol(a, b, tol=5e-6):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_builtin_families_and_norms():
+    assert set(family_names()) >= {"l1inf", "l1inf_weighted", "l1inf_masked",
+                                   "bilevel"}
+    assert family_for_norm("l1inf").name == "l1inf"
+    assert family_for_norm("l1inf_sorted").name == "l1inf"   # alias norm
+    assert family_for_norm("bilevel").name == "bilevel"
+    assert family_for_norm("l1") is None                     # per-leaf only
+    assert {"l1inf", "l1inf_sorted", "l1inf_weighted", "l1inf_masked",
+            "bilevel"} <= packable_norms()
+    with pytest.raises(ValueError, match="unknown constraint family"):
+        get_family("nope")
+
+
+def test_registry_norm_collision_rejected():
+    fam = get_family("l1inf")
+    thief = dataclasses.replace(fam, name="thief")
+    with pytest.raises(ValueError, match="already served"):
+        register_family(thief)
+    assert "thief" not in _REGISTRY
+
+
+def test_registry_reregistration_replaces():
+    snapshot_reg = dict(_REGISTRY)
+    snapshot_norms = dict(_NORM_TO_FAMILY)
+    try:
+        fam = ConstraintFamily(
+            name="test_fam", norms=("test_norm", "test_norm2"),
+            seg_ops=get_family("l1inf").seg_ops,
+            norm_fn=lambda Y, axis=0, w=None: l1inf_norm(Y, axis=axis),
+            project_leaf=lambda Y, C, axis=0, w=None:
+                project_l1inf_newton(Y, C, axis=axis),
+            reference=lambda Y, C, axis=0, w=None:
+                project_l1inf_newton(Y, C, axis=axis))
+        register_family(fam)
+        assert family_for_norm("test_norm").name == "test_fam"
+        assert family_for_norm("test_norm2").name == "test_fam"
+        # replacement that DROPS a norm unbinds it
+        register_family(dataclasses.replace(fam, norms=("test_norm",)))
+        assert "test_fam" in family_names()
+        assert family_for_norm("test_norm").name == "test_fam"
+        assert family_for_norm("test_norm2") is None
+    finally:
+        _REGISTRY.clear(); _REGISTRY.update(snapshot_reg)
+        _NORM_TO_FAMILY.clear(); _NORM_TO_FAMILY.update(snapshot_norms)
+
+
+def test_spec_rejects_weights_on_weightless_norms():
+    with pytest.raises(ValueError, match="does not take"):
+        ProjectionSpec(pattern=r"w", norm="l1inf", radius=1.0,
+                       weights=(1.0, 2.0))
+    with pytest.raises(ValueError, match="does not take"):
+        ProjectionSpec(pattern=r"w", norm="bilevel", radius=1.0,
+                       weights=(1.0,))
+    spec = ProjectionSpec(pattern=r"w", norm="l1inf_weighted", radius=1.0,
+                          weights=(1.0, 2.5))
+    assert spec.weights == (1.0, 2.5)
+    with pytest.raises(ValueError, match="> 0"):
+        ProjectionSpec(pattern=r"w", norm="l1inf_weighted", radius=1.0,
+                       weights=(1.0, -2.0))
+
+
+# ---------------------------------------------------------------------------
+# bilevel: exact vs the sort-based reference on adversarial shapes
+# ---------------------------------------------------------------------------
+
+ADVERSARIAL = [
+    ("square", (32, 32), np.float32),
+    ("wide", (8, 200), np.float32),
+    ("tall", (200, 8), np.float32),
+    ("n1", (1, 64), np.float32),            # single row: u == |Y|
+    ("m1", (50, 1), np.float32),            # single column
+    ("ragged", (13, 37), np.float32),       # nothing lane-aligned
+    ("bf16", (24, 48), jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("name,shape,dtype", ADVERSARIAL,
+                         ids=[a[0] for a in ADVERSARIAL])
+def test_bilevel_newton_matches_reference(name, shape, dtype):
+    rng = np.random.default_rng(hash(name) % 2**32)
+    Y = jnp.asarray(rng.normal(size=shape), dtype)
+    norm = float(l1inf_norm(Y.astype(jnp.float32)))
+    tol = 2e-2 if dtype == jnp.bfloat16 else 5e-6
+    for C_frac in (0.05, 0.5, 1.5):          # outside twice, inside once
+        C = C_frac * norm
+        _tol(project_bilevel(Y, C), project_bilevel_ref(Y, C), tol=tol)
+
+
+def test_bilevel_ties_at_threshold():
+    """Many columns with IDENTICAL maxima: the simplex threshold lands on a
+    tie plateau; Newton must agree with the sort-based reference exactly."""
+    rng = np.random.default_rng(3)
+    Y = np.abs(rng.normal(size=(10, 40))).astype(np.float32)
+    Y = Y / Y.max(axis=0, keepdims=True)    # every column max == 1.0
+    Yj = jnp.asarray(Y)
+    for C in (2.0, 20.0, 39.5, 40.0):
+        _tol(project_bilevel(Yj, C), project_bilevel_ref(Yj, C))
+
+
+def test_bilevel_feasibility_structure_and_gating():
+    rng = np.random.default_rng(4)
+    Y = jnp.asarray(rng.normal(size=(30, 60)), jnp.float32)
+    C = 0.2 * float(l1inf_norm(Y))
+    X = project_bilevel(Y, C)
+    assert float(l1inf_norm(X)) <= C * (1 + 1e-5)        # feasible
+    # column-structured: a column is either dead or elementwise-clipped Y
+    Xn, An = np.asarray(X), np.abs(np.asarray(Y))
+    dead = np.all(Xn == 0, axis=0)
+    assert dead.any() and not dead.all()
+    v = np.abs(Xn).max(axis=0)
+    keep = ~dead
+    np.testing.assert_allclose(
+        Xn[:, keep], (np.sign(np.asarray(Y)) *
+                      np.minimum(An, v[None, :]))[:, keep], atol=1e-6)
+    # inside-ball identity; C <= 0 -> zero
+    np.testing.assert_array_equal(
+        np.asarray(project_bilevel(Y, 1e9)), np.asarray(Y))
+    np.testing.assert_array_equal(np.asarray(project_bilevel(Y, 0.0)), 0.0)
+
+
+def test_bilevel_warm_start_contract():
+    rng = np.random.default_rng(5)
+    Y = jnp.asarray(rng.normal(size=(40, 80)), jnp.float32)
+    C = 0.1 * float(l1inf_norm(Y))
+    X, st = project_bilevel_stats(Y, C)
+    assert int(st["iters"]) > 2
+    X2, st2 = project_bilevel_stats(Y, C, theta0=st["theta"])
+    _tol(X, X2)
+    assert int(st2["iters"]) <= 2            # exact restart: bootstrap only
+    # stale OVERSHOOTING theta0 self-repairs to the exact answer
+    X3, _ = project_bilevel_stats(Y, C, theta0=st["theta"] * 10.0)
+    _tol(X, X3)
+
+
+@pytest.mark.parametrize("name,shape,dtype", ADVERSARIAL,
+                         ids=[a[0] for a in ADVERSARIAL])
+def test_bilevel_segmented_matches_reference(name, shape, dtype):
+    """The packed segmented solver (the engine's newton path) on a buffer
+    holding the adversarial case next to a second ball."""
+    rng = np.random.default_rng(hash(name) % 2**31)
+    Y1 = rng.normal(size=shape).astype(np.float32)
+    Y2 = rng.normal(size=(shape[0], 24)).astype(np.float32)
+    n = shape[0]
+    Yp = jnp.asarray(np.concatenate([Y1, Y2], axis=1), jnp.float32)
+    sids = jnp.asarray(np.array([0] * shape[1] + [1] * 24, np.int32))
+    C1 = 0.3 * float(np.abs(Y1).max(axis=0).sum())
+    C2 = 0.5 * float(np.abs(Y2).max(axis=0).sum())
+    X, theta, _ = project_segmented_family(
+        Yp, sids, jnp.asarray([C1, C2], jnp.float32), num_segments=2,
+        family="bilevel")
+    _tol(np.asarray(X)[:, :shape[1]],
+         project_bilevel_ref(jnp.asarray(Y1), C1), tol=5e-5)
+    _tol(np.asarray(X)[:, shape[1]:],
+         project_bilevel_ref(jnp.asarray(Y2), C2), tol=5e-5)
+
+
+def test_bilevel_pallas_matches_reference():
+    """The fused-kernel path (interpret mode off-TPU) on ragged + tied
+    segments, incl. an inside-ball and a dead-pad segment."""
+    from repro.kernels.l1inf import project_bilevel_pallas_segmented
+    rng = np.random.default_rng(7)
+    Y1 = rng.normal(size=(13, 37)).astype(np.float32)
+    Y2 = (rng.normal(size=(13, 20)) * 0.01).astype(np.float32)  # inside
+    pad = np.zeros((13, 7), np.float32)
+    Yp = jnp.asarray(np.concatenate([Y1, Y2, pad], axis=1))
+    sids = jnp.asarray(np.array([0] * 37 + [1] * 20 + [2] * 7, np.int32))
+    C1 = 0.2 * float(np.abs(Y1).max(axis=0).sum())
+    X, theta = project_bilevel_pallas_segmented(
+        Yp, sids, jnp.asarray([C1, 100.0], jnp.float32), num_segments=2,
+        interpret=True)
+    _tol(np.asarray(X)[:, :37], project_bilevel_ref(jnp.asarray(Y1), C1),
+         tol=5e-5)
+    np.testing.assert_array_equal(np.asarray(X)[:, 37:57], Y2)  # identity
+    np.testing.assert_array_equal(np.asarray(X)[:, 57:], 0.0)   # dummy seg
+    assert float(theta[1]) == 0.0
+    # warm restart converges in the bootstrap pair
+    _, th2, st = project_bilevel_pallas_segmented(
+        Yp, sids, jnp.asarray([C1, 100.0], jnp.float32), num_segments=2,
+        theta0=theta, interpret=True, return_stats=True)
+    assert int(st["newton_iters"]) <= 2
+
+
+def test_bilevel_never_denser_than_exact_projection():
+    """Structured-sparsity claim: at equal radius the bi-level operator
+    kills at least the columns the exact projection kills (theta_bilevel
+    >= mu-weighted death is implied by k=1 mass concentration)."""
+    rng = np.random.default_rng(8)
+    Y = jnp.asarray(rng.normal(size=(50, 100)), jnp.float32)
+    C = 0.15 * float(l1inf_norm(Y))
+    dead_exact = ~np.any(np.asarray(project_l1inf_newton(Y, C)), axis=0)
+    dead_bi = ~np.any(np.asarray(project_bilevel(Y, C)), axis=0)
+    assert dead_bi.sum() >= dead_exact.sum()
+
+
+# ---------------------------------------------------------------------------
+# weighted family: property tests (satellite)
+# ---------------------------------------------------------------------------
+
+def test_weighted_unit_weights_match_plain_newton():
+    rng = np.random.default_rng(10)
+    for shape in ((1, 32), (40, 1), (17, 53), (64, 64)):
+        Y = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        w = jnp.ones((shape[1],), jnp.float32)
+        for C_frac in (0.05, 0.4, 2.0):
+            C = C_frac * float(l1inf_norm(Y))
+            _tol(project_l1inf_weighted(Y, w, C),
+                 project_l1inf_newton(Y, C), tol=1e-5)
+
+
+def test_weighted_joint_scaling_invariance():
+    """(w, C) -> (a*w, a*C) leaves B_w — and hence the projection —
+    unchanged for any a > 0."""
+    rng = np.random.default_rng(11)
+    Y = jnp.asarray(rng.normal(size=(30, 48)), jnp.float32)
+    w = jnp.asarray(np.exp(rng.normal(size=(48,))), jnp.float32)
+    C = 0.3 * float(l1inf_weighted_norm(Y, w))
+    X = project_l1inf_weighted(Y, w, C)
+    for a in (0.1, 3.0, 250.0):
+        _tol(X, project_l1inf_weighted(Y, a * w, a * C), tol=2e-5)
+
+
+def test_weighted_kkt_residuals_random_weights():
+    """KKT of min ||X-Y||_F^2 s.t. sum_j w_j max_i |X_ij| <= C: on the
+    boundary there is one theta >= 0 with (a) per-column removal mass
+    sum_i (|y|-mu_j)_+ == theta * w_j for surviving clipped columns,
+    (b) dead columns have ||y_j||_1 <= theta * w_j, and (c) the constraint
+    is tight."""
+    rng = np.random.default_rng(12)
+    Y = np.abs(rng.normal(size=(40, 60))).astype(np.float32)
+    w = np.exp(rng.normal(size=(60,))).astype(np.float32)
+    C = 0.25 * float((w * Y.max(axis=0)).sum())
+    X = np.asarray(project_l1inf_weighted(jnp.asarray(Y), jnp.asarray(w), C))
+    # (c) tight constraint
+    np.testing.assert_allclose((w * np.abs(X).max(axis=0)).sum(), C,
+                               rtol=1e-5)
+    mu = np.abs(X).max(axis=0)
+    clipped = mu > 0
+    mass = np.maximum(Y - mu[None, :], 0.0).sum(axis=0)
+    # (a) one shared theta across surviving columns: mass_j / w_j constant.
+    # Columns where nothing is clipped (mu == colmax) carry zero mass and
+    # are interior to their segment — exclude them.
+    really_clipped = clipped & (mass > 1e-6)
+    thetas = mass[really_clipped] / w[really_clipped]
+    assert thetas.size > 0
+    theta = np.median(thetas)
+    np.testing.assert_allclose(thetas, theta, rtol=1e-4)
+    # (b) dead columns are dominated at that theta
+    dead = ~clipped
+    assert np.all(Y.sum(axis=0)[dead] <= theta * w[dead] * (1 + 1e-5))
+
+
+def test_weighted_spec_weight_length_validation():
+    params = {"w": jnp.zeros((8, 10), jnp.float32)}
+    specs = (ProjectionSpec(pattern=r"w", norm="l1inf_weighted", radius=1.0,
+                            weights=tuple([1.0] * 7)),)     # wrong length
+    with pytest.raises(ValueError, match="7 weights"):
+        build_packed_plans(params, specs)
+
+
+def test_weighted_packed_with_heterogeneous_weights():
+    """The packed weighted solve (engine path with a real w_col vector)
+    matches the per-leaf weighted solver."""
+    rng = np.random.default_rng(13)
+    params = {"a": jnp.asarray(rng.normal(size=(24, 30)), jnp.float32),
+              "b": jnp.asarray(rng.normal(size=(3, 10, 20)), jnp.float32)}
+    wa = tuple(float(x) for x in np.exp(rng.normal(size=(30,))))
+    wb = tuple(float(x) for x in np.exp(rng.normal(size=(20,))))
+    specs = (ProjectionSpec(pattern=r"a", norm="l1inf_weighted", radius=4.0,
+                            weights=wa),
+             ProjectionSpec(pattern=r"b", norm="l1inf_weighted", radius=2.0,
+                            weights=wb))
+    ref = apply_constraints(params, specs)
+    out, state = apply_constraints_packed(params, specs)
+    _tol(ref["a"], out["a"], tol=1e-5)
+    _tol(ref["b"], out["b"], tol=1e-5)
+    assert set(state) == {"l1inf_weighted_packed/k1"}
+    assert state["l1inf_weighted_packed/k1"].shape == (4,)   # 1 + 3 stacked
+
+
+# ---------------------------------------------------------------------------
+# masked family: single-solve dedupe (satellite)
+# ---------------------------------------------------------------------------
+
+def test_masked_projection_and_mask_consistent():
+    rng = np.random.default_rng(20)
+    Y = jnp.asarray(rng.normal(size=(30, 50)), jnp.float32)
+    C = 0.2 * float(l1inf_norm(Y))
+    X = np.asarray(project_l1inf_masked(Y, C))
+    alive = np.asarray(l1inf_column_mask(Y, C))
+    # the two entry points share one solve: identical support decisions
+    np.testing.assert_array_equal(np.any(X != 0, axis=0), alive)
+    # surviving columns keep their ORIGINAL magnitudes (Eq. 20: no clip)
+    np.testing.assert_array_equal(X[:, alive], np.asarray(Y)[:, alive])
+    # and the support equals the true projection's support
+    P = np.asarray(project_l1inf_newton(jnp.abs(Y), C))
+    np.testing.assert_array_equal(alive, np.any(P > 0, axis=0))
+
+
+def test_masked_inside_ball_mask_is_column_support():
+    Y = jnp.asarray([[1.0, 0.0, 2.0], [0.5, 0.0, 0.1]], jnp.float32)
+    alive = np.asarray(l1inf_column_mask(Y, 100.0))
+    np.testing.assert_array_equal(alive, [True, False, True])
+    np.testing.assert_array_equal(
+        np.asarray(project_l1inf_masked(Y, 100.0)), np.asarray(Y))
+
+
+def test_masked_packed_matches_per_leaf():
+    rng = np.random.default_rng(21)
+    params = {"w": jnp.asarray(rng.normal(size=(20, 40)), jnp.float32)}
+    specs = (ProjectionSpec(pattern=r"w", norm="l1inf_masked", radius=2.0),)
+    ref = apply_constraints(params, specs)
+    out, state = apply_constraints_packed(params, specs)
+    _tol(ref["w"], out["w"])
+    assert set(state) == {"l1inf_masked_packed/k1"}
+
+
+# ---------------------------------------------------------------------------
+# mixed-family packing through the engine (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+def _mixed_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "enc1": {"w": jnp.asarray(rng.normal(size=(24, 50)), jnp.float32)},
+        "blocks": {"mlp_w1": jnp.asarray(rng.normal(size=(3, 16, 40)),
+                                         jnp.float32)},
+        "dec": {"w": jnp.asarray(rng.normal(size=(50, 24)), jnp.bfloat16)},
+        "gate": {"w": jnp.asarray(rng.normal(size=(20, 30)), jnp.float32)},
+    }
+
+
+MIXED_SPECS = (
+    ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=2.0, axis=1),
+    ProjectionSpec(pattern=r"mlp_w1", norm="bilevel", radius=1.5),
+    ProjectionSpec(pattern=r"dec/w", norm="l1inf_weighted", radius=3.0,
+                   weights=tuple(1.0 + 0.05 * i for i in range(24))),
+    ProjectionSpec(pattern=r"gate/w", norm="bilevel", radius=1.0),
+)
+
+
+def test_mixed_family_plans_one_subbuffer_per_family():
+    params = _mixed_params()
+    plans, per_leaf = build_packed_plans(params, MIXED_SPECS)
+    assert not per_leaf
+    by_fam = {p.family: p for p in plans}
+    assert set(by_fam) == {"l1inf", "bilevel", "l1inf_weighted"}
+    # both bilevel leaves (3 stacked + 1 plain) share ONE sub-buffer
+    assert by_fam["bilevel"].num_segments == 4
+    assert by_fam["l1inf"].num_segments == 1
+    assert by_fam["l1inf_weighted"].num_segments == 1
+    w_col = by_fam["l1inf_weighted"].col_weights()
+    np.testing.assert_allclose(w_col[:24], np.asarray(MIXED_SPECS[2].weights))
+    np.testing.assert_array_equal(w_col[24:], 1.0)           # lane padding
+
+
+def test_mixed_family_matches_per_leaf_reference():
+    params = _mixed_params(1)
+    ref = apply_constraints(params, MIXED_SPECS)
+    out, state = apply_constraints_packed(params, MIXED_SPECS)
+    for r, o in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        _tol(r, o, tol=1e-4)                  # bf16 leaf dominates the tol
+    assert out["dec"]["w"].dtype == jnp.bfloat16
+    assert set(state) == {"l1inf_packed/k1", "bilevel_packed/k1",
+                          "l1inf_weighted_packed/k1"}
+
+
+def test_engine_counters_one_solve_per_family_subbuffer():
+    """Tier-1 regression (satellite): a mixed-family spec list at one
+    every_k records EXACTLY one engine invocation per family sub-buffer —
+    the packing refactor must never silently split into per-leaf solves."""
+    params = _mixed_params(2)
+    engine_counters_reset()
+    apply_constraints_packed(params, MIXED_SPECS)
+    assert engine_counters() == {
+        "l1inf_packed/k1/newton": 1,
+        "bilevel_packed/k1/newton": 1,
+        "l1inf_weighted_packed/k1/newton": 1,
+    }
+    # two every_k groups -> one solve per (family, every_k) pair
+    specs2 = MIXED_SPECS[:2] + tuple(
+        dataclasses.replace(s, every_k=4) for s in MIXED_SPECS[2:])
+    engine_counters_reset()
+    apply_constraints_packed(_mixed_params(3), specs2, step=jnp.asarray(4))
+    assert engine_counters() == {
+        "l1inf_packed/k1/newton": 1,
+        "bilevel_packed/k1/newton": 1,
+        "l1inf_weighted_packed/k4/newton": 1,
+        "bilevel_packed/k4/newton": 1,
+    }
+    engine_counters_reset()
+
+
+def test_mixed_family_theta_threads_through_projected_update():
+    """Acceptance: mixed-family specs thread per-family theta warm starts
+    through the unchanged ``projected_update`` signature; steady-state
+    solves hit the bootstrap floor for every family."""
+    from repro.optim import AdamConfig, adam_init
+
+    params = _mixed_params(4)
+    acfg = AdamConfig(lr=1e-3)
+    opt = adam_init(params, acfg)
+    eng = ProjectionEngine(MIXED_SPECS)
+    state = eng.init_state(params)
+    assert set(state) == {"l1inf_packed/k1", "bilevel_packed/k1",
+                          "l1inf_weighted_packed/k1"}
+    grads = jax.tree_util.tree_map(lambda p: 0.01 * jnp.ones_like(p), params)
+    extra = []
+    for _ in range(5):
+        params, opt, state, stats = eng.projected_update(
+            grads, opt, params, acfg, state=state, with_stats=True)
+        extra.append({k: int(v) for k, v in stats.items()})
+    assert all(v > 0 for v in extra[0].values())
+    for k, v in extra[-1].items():
+        assert v <= 3, (k, extra)             # warm across every family
+
+
+def test_mixed_family_pallas_engine_matches_newton():
+    params = _mixed_params(5)
+    ref, _ = apply_constraints_packed(params, MIXED_SPECS, engine="newton")
+    out, _ = apply_constraints_packed(params, MIXED_SPECS, engine="pallas")
+    for r, o in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        _tol(r, o, tol=5e-4)
+
+
+def test_mixed_family_under_jit():
+    params = _mixed_params(6)
+    state0 = init_projection_state(params, MIXED_SPECS)
+    f = jax.jit(lambda p, s: apply_constraints_packed(
+        p, MIXED_SPECS, step=jnp.asarray(1), state=s))
+    out, st = f(params, state0)
+    ref = apply_constraints(params, MIXED_SPECS, step=jnp.asarray(1))
+    for r, o in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(out)):
+        _tol(r, o, tol=1e-4)

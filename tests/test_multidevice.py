@@ -180,6 +180,71 @@ def test_sharded_projection_keeps_shards_resident():
     assert "OK" in out
 
 
+def test_sharded_mixed_families_zero_allgather_and_match_gathered():
+    """Family-registry acceptance: a mixed-family spec list (plain +
+    weighted + bilevel) solved by the SHARDED engine keeps zero all-gathers
+    in its HLO and matches the gathered per-family solves (theta included),
+    with the weighted family's per-column weights sliced rank-locally."""
+    out = _run_subprocess("""
+        import re
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import (ProjectionSpec, ProjectionEngine,
+                                init_projection_state)
+
+        rng = np.random.default_rng(0)
+        params = {
+            "blocks": {"w1": jnp.asarray(rng.normal(size=(4, 64, 256)),
+                                         jnp.float32)},
+            "enc": {"w": jnp.asarray(rng.normal(size=(128, 512)),
+                                     jnp.float32)},
+            "dec": {"w": jnp.asarray(rng.normal(size=(64, 256)),
+                                     jnp.float32)},
+        }
+        specs = (
+            ProjectionSpec(pattern=r"w1$", norm="bilevel", radius=16.0),
+            ProjectionSpec(pattern=r"enc/w", norm="l1inf", radius=8.0),
+            ProjectionSpec(pattern=r"dec/w", norm="l1inf_weighted",
+                           radius=8.0,
+                           weights=tuple(1.0 + 0.01 * i
+                                         for i in range(256))),
+        )
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = {
+            "blocks": {"w1": NamedSharding(mesh, P(None, "data", None))},
+            "enc": {"w": NamedSharding(mesh, P("data", None))},
+            "dec": {"w": NamedSharding(mesh, P(None, "data"))},
+        }
+        params_s = jax.device_put(params, sh)
+        state0 = init_projection_state(params, specs)
+
+        eng = ProjectionEngine(specs, solver="sharded", mesh=mesh)
+        fn = jax.jit(lambda p, s: eng.apply(p, state=s))
+        with mesh:
+            hlo = fn.lower(params_s, state0).compile().as_text()
+        ags = [l for l in hlo.splitlines() if re.search(r"all-gather", l)]
+        assert not ags, "projection HLO contains all-gather:\\n" + \
+            "\\n".join(ags[:5])
+
+        with mesh:
+            out_s, st_s = fn(params_s, state0)
+        ref = ProjectionEngine(specs)       # gathered per-family solves
+        out_r, st_r = ref.apply(params, state=state0)
+        for a, b in zip(jax.tree_util.tree_leaves(out_r),
+                        jax.tree_util.tree_leaves(out_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+        assert set(st_s) == {"bilevel_packed/k1", "l1inf_packed/k1",
+                             "l1inf_weighted_packed/k1"}, sorted(st_s)
+        for k in st_r:
+            np.testing.assert_allclose(np.asarray(st_r[k]),
+                                       np.asarray(st_s[k]),
+                                       rtol=1e-6, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in out
+
+
 def test_train_cell_projection_adds_no_full_weight_allgather():
     """lower_cell train HLO on an FSDP mesh: turning the projection ON must
     not add any all-gather at full-weight size (the sharded engine moves
