@@ -1,0 +1,48 @@
+"""End-to-end serving scenario: train a projected SAE (Algorithm 3),
+compact the structurally-zero encoder columns out, and serve the compact
+model — the paper's feature-selection payoff at inference time.
+
+    PYTHONPATH=src python examples/sae_serve.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ProjectionSpec
+from repro.sae import (SAEConfig, SAETrainConfig, compact_sae,
+                       make_classification, make_serve_step, sae_apply,
+                       train_test_split, train_sae)
+
+D, INFORMATIVE = 1000, 16
+
+# 1) train under the l1,inf projection (double descent)
+X, y, inf_idx = make_classification(
+    n_samples=600, n_features=D, n_informative=INFORMATIVE,
+    class_sep=1.2, seed=0)
+X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+Xtr, ytr, Xte, yte = train_test_split(X, y, 0.2, seed=0)
+spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.15, axis=1)
+res = train_sae(Xtr, ytr, Xte, yte,
+                SAEConfig(n_features=D, n_hidden=64, n_classes=2),
+                SAETrainConfig(epochs=15, lr=2e-3, projection=spec, seed=0))
+print(f"trained: acc={res.test_accuracy*100:.2f}%  "
+      f"colsp={res.column_sparsity:.1f}%  "
+      f"epoch compaction ratios (descent2): "
+      f"{[f'{r:.3f}' for r in res.compaction_history[-1][1][-3:]]}")
+
+# 2) compact: gather surviving encoder rows + co-compact the decoder output
+compact = compact_sae(res.params, (spec,))
+print(f"compacted: {compact.n_selected}/{compact.n_features} features kept "
+      f"-> encoder GEMM at {compact.compaction_ratio:.4f}x dense FLOPs")
+
+# 3) serve: batched jit step on full-width inputs (one static gather inside)
+step = make_serve_step(compact)
+xb = jnp.asarray(Xte[:64], jnp.float32)
+z_c, xh_c = step(compact.params, xb)
+z_d, xh_d = sae_apply(res.params, xb)
+print(f"serve parity: max|z - z_dense| = "
+      f"{float(jnp.abs(z_c - z_d).max()):.2e}, "
+      f"max|xhat - xhat_dense[:, sel]| = "
+      f"{float(jnp.abs(xh_c - xh_d[:, compact.sel]).max()):.2e}")
+
+hits = np.intersect1d(compact.sel, inf_idx).size
+print(f"selected features recover {hits}/{INFORMATIVE} informative ones")

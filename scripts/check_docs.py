@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""Documentation gate (run by scripts/check.sh before the test suite).
+
+Two checks, both plain AST/regex — no third-party linter needed:
+
+1. **Public-API docstring audit.** Every name in ``__all__`` of the audited
+   modules (the public projection/serving API surface) must resolve to a
+   top-level function or class carrying a docstring that includes a
+   one-line ``>>>`` usage example (the shapes/dtypes contract lives in the
+   prose; the example line is the mechanically checkable part). Public
+   methods and properties of audited classes must carry docstrings too
+   (no example required at method granularity).
+
+2. **Anchor/link staleness.** Docstrings and READMEs point into DESIGN.md
+   by section number (``DESIGN.md §7``); if a section is renumbered or
+   removed those pointers rot silently. This check greps every
+   ``DESIGN.md §N`` / ``§§A–B`` reference under src/, tests/, benchmarks/,
+   examples/ and the top-level *.md files and requires a matching
+   ``## §N`` heading in DESIGN.md. Relative markdown links in README.md /
+   benchmarks/README.md must name files that exist.
+
+Exit code 0 = clean; nonzero prints every violation.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+AUDITED_MODULES = [
+    "src/repro/core/engine.py",
+    "src/repro/core/families.py",
+    "src/repro/core/constraints.py",
+    "src/repro/dist/projection.py",
+    "src/repro/sae/serve.py",
+]
+
+ANCHOR_SCAN_GLOBS = [
+    "src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py", "examples/**/*.py",
+    "*.md", "benchmarks/README.md",
+]
+
+LINKED_READMES = ["README.md", "benchmarks/README.md"]
+
+
+def _module_all(tree: ast.Module):
+    """Names in a literal ``__all__`` list/tuple, or None. A computed
+    ``__all__`` (concatenation, augmented assignment, ...) also returns
+    None — audited modules must keep it a plain literal so the audit
+    cannot silently skip exports."""
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == "__all__":
+                    try:
+                        names = ast.literal_eval(node.value)
+                    except (ValueError, SyntaxError):
+                        return None
+                    return list(names) if isinstance(names, (list, tuple)) \
+                        else None
+    return None
+
+
+def audit_module(relpath: str) -> list[str]:
+    path = ROOT / relpath
+    tree = ast.parse(path.read_text(), filename=str(path))
+    names = _module_all(tree)
+    errors = []
+    if names is None:
+        return [f"{relpath}: no literal __all__ (audited modules must "
+                f"declare a plain list/tuple of strings)"]
+    defs = {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.ClassDef))}
+    for name in names:
+        node = defs.get(name)
+        if node is None:
+            errors.append(f"{relpath}: exported {name!r} is not a top-level "
+                          f"def/class in this module")
+            continue
+        doc = ast.get_docstring(node)
+        if not doc:
+            errors.append(f"{relpath}:{node.lineno}: {name} has no docstring")
+            continue
+        if ">>>" not in doc:
+            errors.append(f"{relpath}:{node.lineno}: {name} docstring has no "
+                          f">>> usage example")
+        if isinstance(node, ast.ClassDef):
+            for item in node.body:
+                if isinstance(item, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and not item.name.startswith("_") \
+                        and not ast.get_docstring(item):
+                    errors.append(f"{relpath}:{item.lineno}: public method "
+                                  f"{name}.{item.name} has no docstring")
+    return errors
+
+
+def check_anchors() -> list[str]:
+    design = (ROOT / "DESIGN.md").read_text()
+    sections = set(int(m) for m in re.findall(r"^## §(\d+)", design, re.M))
+    errors = []
+    seen = set()
+    for glob in ANCHOR_SCAN_GLOBS:
+        for path in ROOT.glob(glob):
+            if not path.is_file() or path in seen:
+                continue
+            seen.add(path)
+            text = path.read_text(errors="ignore")
+            rel = path.relative_to(ROOT)
+            refs = set()
+            for m in re.finditer(r"DESIGN\.md §(\d+)", text):
+                refs.add(int(m.group(1)))
+            for m in re.finditer(r"DESIGN\.md §§(\d+)[–-](\d+)", text):
+                refs.update(range(int(m.group(1)), int(m.group(2)) + 1))
+            for sec in sorted(refs - sections):
+                errors.append(f"{rel}: references DESIGN.md §{sec} but "
+                              f"DESIGN.md has no '## §{sec}' heading")
+    return errors
+
+
+def check_links() -> list[str]:
+    errors = []
+    for rel in LINKED_READMES:
+        path = ROOT / rel
+        if not path.exists():
+            errors.append(f"{rel}: missing (README set incomplete)")
+            continue
+        text = path.read_text()
+        for m in re.finditer(r"\[[^\]]+\]\(([^)#]+)(?:#[^)]*)?\)", text):
+            target = m.group(1).strip()
+            if re.match(r"^[a-z]+://", target) or target.startswith("mailto:"):
+                continue
+            if not (path.parent / target).exists():
+                errors.append(f"{rel}: link target {target!r} does not exist")
+    return errors
+
+
+def main() -> int:
+    errors = []
+    for mod in AUDITED_MODULES:
+        errors += audit_module(mod)
+    errors += check_anchors()
+    errors += check_links()
+    if errors:
+        print(f"docs check FAILED ({len(errors)} violation(s)):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"docs check OK: {len(AUDITED_MODULES)} audited modules, "
+          f"anchors and links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,6 +10,8 @@ Public API:
     prox_linf1               — prox of the dual norm via Moreau (Eq. 16)
     project_l1_ball / project_l12_ball / project_simplex_sort
     project_l1inf_segmented  — packed multi-ball solve (one sweep per group)
+    support_indices / compact_columns — host-side support gather: the
+        serving-time column-compaction primitives (``repro.sae.serve``)
     project_l1inf_segmented_sharded — shard_map twin (psum per iteration)
     project_bilevel          — bi-level l1,inf operator (arXiv:2407.16293),
         linear-time; project_bilevel_ref is its sort-based exact reference
@@ -31,7 +33,8 @@ from .simplex import (project_simplex_sort, project_l1_ball,
 from .l1inf import (l1inf_norm, project_l1inf, project_l1inf_sorted,
                     project_l1inf_newton, project_l1inf_newton_stats,
                     project_l1inf_segmented, project_l1inf_segmented_sharded,
-                    theta_l1inf, column_support, active_compaction)
+                    theta_l1inf, column_support, active_compaction,
+                    support_indices, compact_columns)
 from .heap import project_l1inf_heap, project_l1inf_naive, theta_l1inf_heap
 from .baselines import (project_l1inf_quattoni, project_l1inf_bejar,
                         project_l1inf_newton_np)

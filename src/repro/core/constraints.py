@@ -67,17 +67,38 @@ _COUNTERS: Dict[str, int] = {}
 
 
 def engine_count(key: str) -> None:
-    """Increment one invocation counter (engine-internal)."""
+    """Increment one invocation counter (engine-internal).
+
+    ``key``: str — ``"<plan key>/<solver>"`` for packed launches (e.g.
+    ``"l1inf_packed/k1/newton"``) or ``"per_leaf"`` for the fallback path.
+    Counts Python-level solver calls (once per trace/eager call), so jit'd
+    steady state adds nothing — tests use that to prove one-launch-per-step.
+
+    >>> engine_count("l1inf_packed/k1/newton")
+    """
     _COUNTERS[key] = _COUNTERS.get(key, 0) + 1
 
 
 def engine_counters() -> Dict[str, int]:
-    """Snapshot of all per-plan/per-path invocation counters."""
+    """Snapshot of all per-plan/per-path invocation counters.
+
+    Returns a plain ``{key: int}`` dict copy (mutating it does not touch
+    the live registry). Pair with ``engine_counters_reset`` around a
+    measured region to count solver launches attributable to that region.
+
+    >>> before = engine_counters()
+    """
     return dict(_COUNTERS)
 
 
 def engine_counters_reset() -> None:
-    """Zero every counter (call before a measured region)."""
+    """Zero every counter (call before a measured region).
+
+    Global across all plans/solvers — benchmarks and tests reset, run one
+    region, then diff against ``engine_counters()``.
+
+    >>> engine_counters_reset()
+    """
     _COUNTERS.clear()
 
 
@@ -97,6 +118,10 @@ class ProjectionSpec:
               floats, one per canonical column of every matching leaf;
               None = uniform 1.0). Stored as a static tuple so specs stay
               hashable/trace-safe.
+
+    Hashable/frozen — carry tuples of specs in static config (configs/*.py).
+
+    >>> spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.1, axis=1)
     """
     pattern: str
     norm: str = "l1inf"
@@ -122,6 +147,15 @@ class ProjectionSpec:
 
 
 def leaf_path_str(path) -> str:
+    """'/'-joined name of one pytree leaf path — the string spec patterns
+    match against.
+
+    ``path``: the key-path tuple from ``jax.tree_util``'s ``_with_path``
+    APIs (dict keys, sequence indices, and attribute names all stringify).
+    Returns e.g. ``"enc1/w"`` for ``params["enc1"]["w"]``.
+
+    >>> name = leaf_path_str(path)   # from tree_flatten_with_path
+    """
     parts = []
     for p in path:
         if hasattr(p, "key"):
@@ -196,9 +230,15 @@ def apply_constraints(params: Any, specs: Sequence[ProjectionSpec],
                       step: Optional[jnp.ndarray] = None) -> Any:
     """Project matching leaves of `params`, one launch per matrix.
 
-    jit-safe (cond on step % every_k). The packed fast path for l1,inf specs
-    is ``apply_constraints_packed``; this per-leaf form stays as the simple
-    reference used by tests and the masked/l1/l12 norms.
+    ``params``: any pytree (constrained leaves must be >= 2-D, any float
+    dtype — the solve runs in f32 and casts back); ``specs``: ordered —
+    first matching spec wins per leaf; ``step``: optional scalar int for
+    ``every_k`` gating. Returns the projected pytree, same structure/
+    dtypes. jit-safe (cond on step % every_k). The packed fast path is
+    ``apply_constraints_packed``; this per-leaf form stays as the simple
+    reference used by tests and the l1/l12 norms.
+
+    >>> params = apply_constraints(params, (spec,))
     """
     if not specs:
         return params
@@ -287,8 +327,16 @@ class PackedPlan:
 def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
     """Split the leaves into packed plans — one per (constraint family,
     every_k) pair — and a per-leaf remainder [(leaf_index, spec)] for the
-    unpackable balls (l1, l12). Pure shape bookkeeping — safe to call
-    during tracing (shapes are static)."""
+    unpackable balls (l1, l12).
+
+    ``params``: pytree of arrays or ShapeDtypeStructs (shapes are all that
+    is read); ``specs``: ProjectionSpec sequence. Returns
+    ``(plans, per_leaf)`` with ``plans`` a list of ``PackedPlan`` (static
+    layout: lane-padded column blocks, per-column segment ids, per-segment
+    radii). Pure shape bookkeeping — safe to call during tracing.
+
+    >>> plans, per_leaf = build_packed_plans(params, specs)
+    """
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     groups: Dict[Tuple[str, int], list] = {}
     per_leaf = []
@@ -360,7 +408,17 @@ def _stacked_axis(axis: int, ndim: int) -> int:
 
 def column_masks(params: Any, specs: Sequence[ProjectionSpec]) -> Any:
     """Per-leaf {0,1} masks from the current column support of matching leaves
-    (the paper's double-descent mask M0). Non-matching leaves get ones."""
+    (the paper's double-descent mask M0). Non-matching leaves get ones.
+
+    ``params``: pytree (constrained leaves >= 2-D); returns a pytree of the
+    SAME structure/shapes/dtypes where each matching leaf holds 1.0 on
+    columns with any nonzero entry (along the spec's max axis, per stacked
+    slice for ndim > 2 leaves) and 0.0 on dead columns. The serving path
+    (``sae/serve.support_selection``) derives its gather from this same
+    mask, so training freeze and serving compaction cannot disagree.
+
+    >>> masks = column_masks(params, (spec,))
+    """
     def one(path, leaf):
         name = leaf_path_str(path)
         for spec in specs:
@@ -377,12 +435,26 @@ def column_masks(params: Any, specs: Sequence[ProjectionSpec]) -> Any:
 
 
 def apply_masks(tree: Any, masks: Any) -> Any:
-    """Elementwise tree * mask (grad masking of Algorithm 3)."""
+    """Elementwise tree * mask (grad masking of Algorithm 3).
+
+    ``tree`` and ``masks``: pytrees of identical structure (broadcastable
+    leaves — typically grads and the ``column_masks`` output). Returns the
+    masked tree, dtypes following numpy promotion of ``t * m``.
+
+    >>> grads = apply_masks(grads, masks)
+    """
     return jax.tree_util.tree_map(lambda t, m: t * m, tree, masks)
 
 
 def sparsity_report(params: Any, specs: Sequence[ProjectionSpec]) -> dict:
-    """Column sparsity (%) per matching leaf — the paper's `Colsp` metric."""
+    """Column sparsity (%) per matching leaf — the paper's `Colsp` metric.
+
+    Returns ``{leaf path: float percent}`` of fully-zero columns along the
+    spec's max axis (stacked ndim > 2 leaves pool all slices). Host-side
+    convenience (floats, not traced values) for logging and benches.
+
+    >>> sparsity_report(params, (spec,))   # {'enc1/w': 99.0}
+    """
     out = {}
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     for path, leaf in flat:

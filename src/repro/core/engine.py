@@ -46,7 +46,12 @@ class ProjectionEngine:
 
     Construct once per step-build (the specs and solver are static); call
     ``apply``/``projected_update`` inside the traced step. ``solver`` is the
-    default for every packed plan; ``mesh`` is required for "sharded".
+    default for every packed plan ("newton" | "pallas" | "sharded"); ``mesh``
+    is required for "sharded". The engine itself is stateless — the theta
+    warm-start dict returned by ``init_state`` threads through the caller's
+    train state.
+
+    >>> engine = ProjectionEngine((spec,)); state = engine.init_state(params)
     """
 
     def __init__(self, specs: Sequence[ProjectionSpec],
@@ -205,7 +210,14 @@ class ProjectionEngine:
 
 def init_projection_state(params: Any,
                           specs: Sequence[ProjectionSpec]) -> Dict[str, Any]:
-    """Zero theta warm-start vectors, one per packed plan (pytree-safe)."""
+    """Zero theta warm-start vectors, one per packed plan (pytree-safe).
+
+    ``params``: pytree of arrays or ShapeDtypeStructs (only shapes are
+    read). Returns ``{plan key: (num_segments,) f32 zeros}`` — the state
+    threaded through ``apply_constraints_packed`` between steps.
+
+    >>> state = init_projection_state(params, specs)
+    """
     return ProjectionEngine(specs).init_state(params)
 
 
@@ -217,7 +229,11 @@ def apply_constraints_packed(params: Any, specs: Sequence[ProjectionSpec],
 
     Functional form of ``ProjectionEngine.apply`` — ``engine`` picks the
     solver ("newton" | "pallas" | "sharded"; the latter needs ``mesh``).
-    Returns (params, new_state).
+    ``params``: any pytree; ``step``: optional scalar int (every_k gating);
+    ``state``: the dict from ``init_projection_state`` or a previous call.
+    Returns (projected params, new_state).
+
+    >>> params, state = apply_constraints_packed(params, specs, state=state)
     """
     return ProjectionEngine(specs, solver=engine, mesh=mesh).apply(
         params, step=step, state=state)

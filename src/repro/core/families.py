@@ -67,7 +67,18 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class ConstraintFamily:
-    """One registered constraint ball (see module docstring)."""
+    """One registered constraint ball (see module docstring).
+
+    Frozen record: ``norms`` (the ProjectionSpec.norm strings served),
+    ``seg_ops`` (the per-column segmented-Newton hooks — the
+    ``core.l1inf._PlainSegOps`` contract, DESIGN.md §8), ``norm_fn``
+    ``(Y, axis, w) -> scalar``, ``project_leaf``/``reference``
+    ``(Y, C, axis, w) -> X`` on (n, m) f32/bf16 matrices, an optional
+    ``pallas_loader`` for the fused packed kernel, and ``uses_weights``.
+
+    >>> fam = ConstraintFamily(name="l1inf", norms=("l1inf",), seg_ops=ops,
+    ...                        norm_fn=nf, project_leaf=pl, reference=ref)
+    """
     name: str
     norms: Tuple[str, ...]
     seg_ops: object
@@ -87,7 +98,10 @@ def register_family(fam: ConstraintFamily) -> ConstraintFamily:
 
     Re-registering a name replaces it (norm bindings follow, and norms the
     replacement no longer declares are unbound); a norm string already
-    claimed by a DIFFERENT family is an error.
+    claimed by a DIFFERENT family is an error. Returns ``fam`` so the call
+    can double as a decorator-style definition.
+
+    >>> register_family(my_family)   # my_family.norms now accepted in specs
     """
     for norm in fam.norms:
         owner = _NORM_TO_FAMILY.get(norm)
@@ -104,6 +118,12 @@ def register_family(fam: ConstraintFamily) -> ConstraintFamily:
 
 
 def get_family(name: str) -> ConstraintFamily:
+    """Look up a registered family by its name (NOT by spec norm — that is
+    ``family_for_norm``). Raises ValueError for unknown names, listing the
+    registered ones.
+
+    >>> fam = get_family("bilevel")
+    """
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -113,17 +133,31 @@ def get_family(name: str) -> ConstraintFamily:
 
 
 def family_for_norm(norm: str) -> Optional[ConstraintFamily]:
-    """The family serving a spec norm, or None (l1/l12 stay per-leaf)."""
+    """The family serving a spec norm, or None (l1/l12 stay per-leaf).
+
+    ``norm``: a ``ProjectionSpec.norm`` string. One family may serve
+    several norms (``l1inf`` also serves ``l1inf_sorted``).
+
+    >>> family_for_norm("l1inf_masked").name   # 'l1inf_masked'
+    """
     name = _NORM_TO_FAMILY.get(norm)
     return _REGISTRY[name] if name is not None else None
 
 
 def family_names() -> Tuple[str, ...]:
+    """Sorted tuple of every registered family name.
+
+    >>> family_names()   # ('bilevel', 'l1inf', 'l1inf_masked', ...)
+    """
     return tuple(sorted(_REGISTRY))
 
 
 def packable_norms() -> frozenset:
-    """Every spec norm that packs into a family sub-buffer."""
+    """Every spec norm that packs into a family sub-buffer (the complement,
+    l1/l12, stays on the per-leaf path — see ``core.constraints``).
+
+    >>> "bilevel" in packable_norms()   # True
+    """
     return frozenset(_NORM_TO_FAMILY)
 
 
@@ -140,8 +174,17 @@ def project_segmented_family(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg, *,
                              max_iter: int = 32):
     """Family-dispatching twin of ``project_l1inf_segmented``: project each
     column group of a packed (n, M) buffer onto its own ball of the named
-    family. ``w_col`` (M,) carries per-column weights for weight-aware
-    families (ignored otherwise). Returns (X, theta_seg, iters)."""
+    family.
+
+    ``Y``: (n, M) f32 packed buffer; ``seg_ids``: (M,) int32 per-column
+    ball ids in [0, num_segments] (num_segments = padding sentinel);
+    ``C_seg``: (num_segments,) f32 radii; ``w_col``: optional (M,) f32
+    per-column weights for weight-aware families (ignored otherwise);
+    ``theta0``: optional (num_segments,) f32 warm start. Returns
+    (X (n, M) f32, theta_seg (num_segments,) f32, iters scalar int32).
+
+    >>> X, theta, iters = project_segmented_family(Y, sids, C, num_segments=3)
+    """
     fam = get_family(family)
     return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
                             max_iter, ops=fam.seg_ops,
@@ -158,7 +201,16 @@ def project_segmented_family_sharded(Y: jnp.ndarray, seg_ids: jnp.ndarray,
                                      max_iter: int = 32):
     """Sharded twin of ``project_segmented_family`` — call inside shard_map
     (the ``project_l1inf_segmented_sharded`` contract: one (num_segments,)
-    psum per Eq.-(19) evaluation, shards never leave their rank)."""
+    psum per Eq.-(19) evaluation, shards never leave their rank).
+
+    Same shapes/returns as ``project_segmented_family`` but ``Y``/``seg_ids``/
+    ``w_col`` are the RANK-LOCAL column block; ``axis_names`` are the mesh
+    axes to psum over and ``contrib`` an optional (M_local,) bool mask
+    (False = this rank's copy of a replicated column does not count).
+
+    >>> X, th, it = project_segmented_family_sharded(Yl, sidl, C,
+    ...     num_segments=3, axis_names=("data",))
+    """
     fam = get_family(family)
     return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
                             max_iter, axis_names=tuple(axis_names),

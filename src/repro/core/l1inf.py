@@ -56,6 +56,7 @@ from __future__ import annotations
 import functools
 from typing import Optional, Tuple
 
+import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -70,6 +71,8 @@ __all__ = [
     "theta_l1inf",
     "column_support",
     "active_compaction",
+    "support_indices",
+    "compact_columns",
 ]
 
 # Sentinel theta assigned to padding columns (dummy segment) in packed
@@ -109,6 +112,38 @@ def active_compaction(active: jnp.ndarray,
     sort_key = jnp.where(active, key.astype(jnp.float32), jnp.inf)
     perm = jnp.argsort(sort_key)
     return perm, jnp.sum(active.astype(jnp.int32))
+
+
+def support_indices(support) -> np.ndarray:
+    """Host-side static column-gather indices from a boolean support vector.
+
+    ``support``: bool (m,) (array-like; jax or numpy). Returns int32 (J,)
+    — the indices of the True entries, ascending. This is exactly the
+    active prefix of ``active_compaction(support)`` with the default key
+    (both orderings are stable in the original column index), but resolved
+    on the host so the count J is a static Python int and downstream
+    gathers get static shapes — the serving-time twin of the traced
+    ``active_compaction`` (which keeps shapes and lives inside jit).
+
+    >>> support_indices(np.array([True, False, True]))   # -> [0, 2]
+    """
+    return np.nonzero(np.asarray(support))[0].astype(np.int32)
+
+
+def compact_columns(x: jnp.ndarray, idx, axis: int = -1) -> jnp.ndarray:
+    """Gather the surviving columns ``idx`` of ``x`` along ``axis``.
+
+    ``x``: any-rank array (any dtype — values pass through untouched);
+    ``idx``: int (J,) from ``support_indices``. Returns ``x`` with ``axis``
+    reduced to length J. A gather of untouched values is exact (no
+    arithmetic), which is the first half of the serving exactness argument
+    (DESIGN.md §9); decoder-row co-compaction is the same gather applied
+    to the output axis of the decoder with the SAME ``idx``.
+
+    >>> compact_columns(jnp.ones((4, 8)), np.array([1, 5]), axis=1).shape
+    (4, 2)
+    """
+    return jnp.take(x, jnp.asarray(idx, jnp.int32), axis=axis)
 
 
 # -----------------------------------------------------------------------------

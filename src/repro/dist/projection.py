@@ -59,6 +59,8 @@ class ShardedPlan:
     keep their global rows/lead/segment ids but ``m``/``m_pad``/``col_start``
     are per-rank. ``col_sharded[i]`` says entry i's columns are split over
     the mesh (vs replicated on every rank and owned by rank 0).
+
+    >>> sp = shard_packed_plan(plan, n_devices=8)   # sp: ShardedPlan
     """
     global_plan: PackedPlan
     local: PackedPlan
@@ -84,6 +86,8 @@ def shard_packed_plan(plan: PackedPlan, n_devices: int) -> ShardedPlan:
     Entries whose column count is divisible by the device count get
     ``m / D`` columns per rank (lane-padded locally); the rest stay
     replicated. Pure shape bookkeeping — safe during tracing.
+
+    >>> sp = shard_packed_plan(plan, n_devices=len(jax.devices()))
     """
     entries, flags, col = [], [], 0
     for e in plan.entries:
@@ -135,8 +139,12 @@ def project_plan_sharded(leaves: Sequence[jnp.ndarray], plan: PackedPlan,
 
     ``leaves`` are the plan entries' leaf arrays in entry order (any
     sharding — GSPMD reshards to the canonical column layout at the
-    shard_map boundary, an all-to-all, not a gather). Returns
-    (projected_leaves, theta, iters) with theta/iters replicated.
+    shard_map boundary, an all-to-all, not a gather); ``theta0``:
+    optional (num_segments,) f32 warm start. Returns
+    (projected_leaves list, theta (num_segments,) f32, iters int32) with
+    theta/iters replicated; projected leaves keep their input shardings.
+
+    >>> outs, theta, iters = project_plan_sharded(vals, plan, mesh)
     """
     axis_names = tuple(mesh.axis_names)
     D = int(np.prod([mesh.shape[a] for a in axis_names], dtype=np.int64))

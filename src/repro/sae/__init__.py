@@ -1,3 +1,5 @@
 from .model import SAEConfig, sae_init, sae_apply, sae_loss, accuracy
 from .data import make_classification, make_lung_surrogate, train_test_split
 from .train import SAETrainConfig, train_sae, SAEResult
+from .serve import (CompactSAE, LeafSupport, compact_sae, compact_leaf,
+                    support_selection, make_serve_step)

@@ -1,0 +1,262 @@
+"""Compacted SAE serving — the paper's feature-selection payoff at inference.
+
+After projected training (Algorithm 3) the l1,inf constraint leaves fewer
+than ~2% of the encoder's input-feature columns alive at the paper's ~99%
+column-sparsity regime; the rest are STRUCTURAL zeros (the gated projected
+step writes the projection output into the weight, so a dead column is an
+exact-zero row of ``enc1/w``, not a small number). Serving the dense encoder
+then wastes ~100x the GEMM FLOPs on rows that contribute exact zeros.
+
+This module is the serving path (DESIGN.md §9):
+
+  * ``support_selection(params, specs)`` derives the per-leaf surviving
+    column sets from ``core.constraints.column_masks`` — the SAME mask the
+    double-descent freeze uses, so training and serving can never disagree
+    on the support;
+  * ``compact_leaf`` gathers the surviving columns of one leaf into a dense
+    compact matrix (``core.support_indices`` + ``core.compact_columns`` —
+    the host-side twins of the engine's ``active_compaction``);
+  * ``compact_sae(params, specs)`` builds a ``CompactSAE``: the encoder's
+    surviving feature rows gathered into a dense (J, h) matrix, the decoder
+    OUTPUT columns co-compacted with the same index vector (so the served
+    reconstruction covers exactly the selected features), biases/interior
+    layers untouched;
+  * ``CompactSAE.apply`` is bit-exact (to fp summation order) with the dense
+    ``sae_apply`` on the support: logits Z match everywhere, the
+    reconstruction matches on the selected features;
+  * ``make_serve_step`` wires the batched jit serving step — full-width
+    inputs in, one static gather, compact GEMMs — optionally shard_map'd
+    over a mesh with the batch laid out by ``dist.sharding.default_rules``.
+
+Why only the FEATURE axis compacts: a dead feature row of ``enc1/w``
+removes its input exactly because ``x @ W1`` is linear in the rows. The
+hidden axis does NOT share this property — a dead hidden COLUMN still
+contributes ``relu(b1_j)`` through its bias — so ``compact_sae`` refuses
+specs whose column axis is the hidden one (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.constraints import (ProjectionSpec, column_masks, leaf_path_str,
+                                _first_match, _stacked_axis)
+from ..core.l1inf import compact_columns, support_indices
+from .model import sae_apply
+
+__all__ = ["LeafSupport", "support_selection", "compact_leaf", "CompactSAE",
+           "compact_sae", "make_serve_step"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSupport:
+    """Surviving-column set of one constrained leaf (all fields static).
+
+    ``sel``: int32 (J,) surviving canonical-column indices (ascending);
+    ``col_axis``: the axis of the ORIGINAL leaf the columns live on (the
+    non-max axis of the trailing 2-D slice — stacked leading dims shift it);
+    ``n_cols``: the full column count m, so ``ratio = J / m``.
+
+    >>> LeafSupport(sel=np.array([0, 2], np.int32), col_axis=0, n_cols=4).ratio
+    0.5
+    """
+    sel: np.ndarray
+    col_axis: int
+    n_cols: int
+
+    @property
+    def n_selected(self) -> int:
+        """J — the number of surviving columns (static Python int)."""
+        return int(self.sel.size)
+
+    @property
+    def ratio(self) -> float:
+        """Compaction ratio J / m in [0, 1] (1.0 = nothing pruned)."""
+        return self.n_selected / max(self.n_cols, 1)
+
+
+def support_selection(params: Any, specs: Sequence[ProjectionSpec]
+                      ) -> Dict[str, LeafSupport]:
+    """Derive {leaf path: LeafSupport} for every spec-matching leaf.
+
+    ``params``: param pytree (leaves of any float dtype); ``specs``: the
+    SAME ProjectionSpec tuple the model trained under. The support comes
+    from ``column_masks`` — the structural-zero contract (DESIGN.md §9): a
+    column the projection killed is an exact-zero slice, so the mask test
+    is exact, not a tolerance. A stacked (ndim > 2) leaf keeps the UNION
+    of its slices' supports (a column dropped only where it is zero in
+    EVERY slice — the gather stays exact and the compact leaf stays
+    rectangular). Host-side: call at compaction time, not inside jit.
+
+    >>> sup = support_selection(params, specs)["enc1/w"]
+    """
+    masks = column_masks(params, specs)
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    mflat = jax.tree_util.tree_flatten_with_path(masks)[0]
+    out: Dict[str, LeafSupport] = {}
+    for (path, leaf), (_, mask) in zip(flat, mflat):
+        spec = _first_match(specs, leaf_path_str(path), leaf)
+        if spec is None:
+            continue
+        max_axis = _stacked_axis(spec.axis, leaf.ndim)
+        col_axis = leaf.ndim - 2 if spec.axis in (1, -1) else leaf.ndim - 1
+        # one representative row per column (the mask is constant along the
+        # max axis), then union over any stacked leading dims
+        alive = np.asarray(jnp.take(mask, 0, axis=max_axis)) != 0
+        alive = alive.reshape(-1, leaf.shape[col_axis]).any(axis=0)
+        out[leaf_path_str(path)] = LeafSupport(
+            sel=support_indices(alive), col_axis=col_axis,
+            n_cols=int(leaf.shape[col_axis]))
+    return out
+
+
+def compact_leaf(leaf: jnp.ndarray, sup: LeafSupport) -> jnp.ndarray:
+    """Gather one leaf's surviving columns into a dense compact array.
+
+    ``leaf``: (..., n, m)-shaped (any float dtype, stacked dims allowed);
+    ``sup``: its ``LeafSupport``. Returns the leaf with ``sup.col_axis``
+    reduced from m to J, dtype preserved. Zero-dead support is the
+    identity gather; an all-dead support returns a zero-width axis (jax
+    matmuls against it produce exact zeros, so serving still works).
+
+    >>> w_c = compact_leaf(params["enc1"]["w"], sup)   # (d, h) -> (J, h)
+    """
+    return compact_columns(leaf, sup.sel, axis=sup.col_axis)
+
+
+@dataclasses.dataclass(frozen=True)
+class CompactSAE:
+    """A projected-trained SAE with the dead encoder columns compiled out.
+
+    ``params``: the compact param pytree — ``enc1/w`` is (J, h) (surviving
+    feature rows, original dtype), ``dec2/w`` is (h, J) and ``dec2/b`` (J,)
+    (decoder OUTPUT co-compacted by the same index vector), all other
+    weight leaves untouched, plus a ``"sel"`` leaf (int32 (J,)) so the
+    support TRAVELS WITH the checkpoint — a serving step fed a refreshed
+    ``CompactSAE.params`` gathers with the refreshed support, never a
+    stale closure; ``sel``: the same indices as a host array;
+    ``n_features``: the original d. Built by ``compact_sae``.
+
+    >>> z, xhat_sel = compact.apply(compact.select(x))
+    """
+    params: Dict[str, Any]
+    sel: np.ndarray
+    n_features: int
+
+    @property
+    def n_selected(self) -> int:
+        """J — the number of surviving input features."""
+        return int(self.sel.size)
+
+    @property
+    def compaction_ratio(self) -> float:
+        """J / d: the fraction of encoder GEMM FLOPs serving still pays."""
+        return self.n_selected / max(self.n_features, 1)
+
+    def select(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Gather the selected features of full-width ``x``: (..., d) ->
+        (..., J). The only full-width op left on the serving path."""
+        return compact_columns(x, self.sel, axis=-1)
+
+    def apply(self, x_sel: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Forward pass on pre-selected inputs ``x_sel``: (B, J) -> logits
+        (B, k) and reconstruction (B, J) of the SELECTED features. Equals
+        dense ``sae_apply(params, x)`` as (Z, Xhat[:, sel]) to fp order —
+        dead rows of enc1/w only ever add exact zeros to the pre-ReLU sums
+        (DESIGN.md §9)."""
+        return sae_apply(self.params, x_sel)
+
+
+def compact_sae(params: Dict[str, Any],
+                specs: Sequence[ProjectionSpec]) -> CompactSAE:
+    """Compact a projected-trained SAE param tree for serving.
+
+    ``params``: the ``sae_init`` pytree after projected training (any float
+    dtype); ``specs``: the training ProjectionSpec tuple — it must
+    constrain ``enc1/w`` along the FEATURE axis (the paper's axis=1 on the
+    (d, h) encoder; the hidden axis cannot compact exactly because dead
+    hidden units still emit relu(b) — refused with ValueError). Returns a
+    ``CompactSAE`` whose ``apply`` matches dense ``sae_apply`` on the
+    support. Host-side, one-off: run once per checkpoint, then serve the
+    result via ``make_serve_step``.
+
+    >>> compact = compact_sae(result.params, (spec,))
+    """
+    sups = support_selection(params, specs)
+    enc_key = next((k for k in sups if re.search(r"enc1/w$", k)), None)
+    if enc_key is None:
+        raise ValueError(
+            f"specs select no enc1/w leaf (matched: {sorted(sups)} — "
+            f"compact_sae serves the paper's encoder feature selection)")
+    sup = sups[enc_key]
+    d, h = params["enc1"]["w"].shape
+    if sup.col_axis != 0:
+        raise ValueError(
+            "compact_sae: spec prunes the hidden axis of enc1/w — dead "
+            "hidden units still contribute relu(b1) so compaction would "
+            "not be exact; the serving contract covers the feature axis "
+            "(spec.axis in (1, -1) on the (d, h) encoder)")
+    sel = sup.sel
+    out = {
+        "enc1": {"w": compact_leaf(params["enc1"]["w"], sup),
+                 "b": params["enc1"]["b"]},
+        "enc2": params["enc2"],
+        "dec1": params["dec1"],
+        # decoder-row co-compaction: the reconstruction head's OUTPUT
+        # features are the same index space as the encoder's input features
+        "dec2": {"w": compact_columns(params["dec2"]["w"], sel, axis=1),
+                 "b": compact_columns(params["dec2"]["b"], sel, axis=0)},
+        # the support rides in the param tree (sae_apply ignores it): a
+        # checkpoint refresh hands the serving step its own gather indices
+        "sel": jnp.asarray(sel, jnp.int32),
+    }
+    return CompactSAE(params=out, sel=sel, n_features=int(d))
+
+
+def make_serve_step(compact: CompactSAE, *, mesh=None, rules=None):
+    """Build the batched, jit-compiled serving step for a ``CompactSAE``.
+
+    Returns ``step(params, x) -> (z, xhat_sel)`` taking FULL-width inputs
+    ``x`` (B, d) — one gather selects the J surviving features, then every
+    GEMM runs at compact width. Pass ``compact.params`` as ``params``: it
+    stays a step argument (no recompile on checkpoint refresh) and carries
+    its own ``"sel"`` leaf, so a refreshed ``CompactSAE`` with a DIFFERENT
+    surviving set of the same size J serves correctly through an old step
+    (a different J retraces — shapes changed). With ``mesh`` given the
+    step is shard_map'd: the batch is laid out over the mesh axes
+    ``dist.sharding`` rules assign to "batch" (``default_rules()`` when
+    ``rules`` is None — B must divide, and rules that map "batch" to None
+    are rejected rather than silently replicating the whole batch per
+    rank), params replicated, no collectives in the body (rows are
+    independent).
+
+    >>> step = make_serve_step(compact)   # then: z, xr = step(compact.params, x)
+    """
+
+    def _apply(params, x):
+        x_sel = jnp.take(x, params["sel"], axis=-1)
+        return sae_apply(params, x_sel)
+
+    if mesh is None:
+        return jax.jit(_apply)
+
+    from ..dist.sharding import default_rules
+    from jax.experimental.shard_map import shard_map
+    rules = default_rules() if rules is None else rules
+    batch_axes = rules.get("batch")
+    if batch_axes is None:
+        raise ValueError(
+            "make_serve_step: the sharding rules map 'batch' to None — "
+            "every rank would redundantly compute the FULL batch; name a "
+            "mesh axis for 'batch' (see dist.sharding.default_rules)")
+    fn = shard_map(_apply, mesh=mesh,
+                   in_specs=(P(), P(batch_axes, None)),
+                   out_specs=P(batch_axes, None),
+                   check_rep=False)
+    return jax.jit(fn)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core import (ProjectionEngine, ProjectionSpec, column_masks,
-                    family_for_norm)
+                    family_for_norm, sparsity_report)
 from ..optim import AdamConfig, adam_init
 from .model import SAEConfig, sae_init, sae_loss, accuracy
 
@@ -42,6 +42,11 @@ class SAEResult:
     column_sparsity: float     # % of feature columns of enc1/w fully zero
     selected: np.ndarray       # indices of surviving features
     history: list
+    # serving-eval path: per-epoch surviving-column fraction of the
+    # constrained leaves (J/m — what compact_sae would keep at that epoch),
+    # mirrored by history entries; compaction_ratio is the final value
+    compaction_history: list = dataclasses.field(default_factory=list)
+    compaction_ratio: float = 1.0
 
 
 def _make_step(cfg: SAEConfig, tcfg: SAETrainConfig, acfg: AdamConfig):
@@ -61,12 +66,21 @@ def _make_step(cfg: SAEConfig, tcfg: SAETrainConfig, acfg: AdamConfig):
     return step, engine
 
 
-def _run_descent(params, step_fn, engine, X, y, tcfg, mask, rng):
+def _compaction_ratio(params, specs) -> float:
+    """Mean surviving-column fraction J/m of the constrained leaves — the
+    width ``compact_sae`` would serve at (1.0 when nothing is constrained)."""
+    rep = sparsity_report(params, specs)
+    if not rep:
+        return 1.0
+    return float(np.mean([1.0 - v / 100.0 for v in rep.values()]))
+
+
+def _run_descent(params, step_fn, engine, X, y, tcfg, mask, rng, specs=()):
     acfg = AdamConfig(lr=tcfg.lr)
     opt_state = adam_init(params, acfg)
     proj_state = engine.init_state(params)
     n = X.shape[0]
-    history = []
+    history, compaction = [], []
     for epoch in range(tcfg.epochs):
         perm = rng.permutation(n)
         for s in range(0, n, tcfg.batch_size):
@@ -74,7 +88,8 @@ def _run_descent(params, step_fn, engine, X, y, tcfg, mask, rng):
             params, opt_state, proj_state, loss, aux = step_fn(
                 params, opt_state, proj_state, X[idx], y[idx], mask)
         history.append(float(loss))
-    return params, history
+        compaction.append(_compaction_ratio(params, specs))
+    return params, history, compaction
 
 
 def train_sae(X_train: np.ndarray, y_train: np.ndarray,
@@ -106,10 +121,14 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
         tcfg1 = tcfg
     step_fn, step_engine = _make_step(cfg, tcfg1, acfg)
 
+    eval_specs = (tcfg1.projection,) if tcfg1.projection else ()
+
     # ---- descent 1: projected training --------------------------------
-    params, hist1 = _run_descent(params0, step_fn, step_engine, X_train,
-                                 y_train_j, tcfg, ones_mask, rng)
+    params, hist1, comp1 = _run_descent(params0, step_fn, step_engine,
+                                        X_train, y_train_j, tcfg, ones_mask,
+                                        rng, specs=eval_specs)
     history = [("descent1", hist1)]
+    compaction_history = [("descent1", comp1)]
 
     # ---- double descent: mask, rewind, retrain -------------------------
     if tcfg.projection and tcfg.double_descent:
@@ -120,9 +139,11 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
             import dataclasses as _dc
             step_fn, step_engine = _make_step(
                 cfg, _dc.replace(tcfg, projection=None), acfg)
-        params, hist2 = _run_descent(rewound, step_fn, step_engine, X_train,
-                                     y_train_j, tcfg, masks, rng)
+        params, hist2, comp2 = _run_descent(rewound, step_fn, step_engine,
+                                            X_train, y_train_j, tcfg, masks,
+                                            rng, specs=eval_specs)
         history.append(("descent2", hist2))
+        compaction_history.append(("descent2", comp2))
 
     test_acc = float(accuracy(params, jnp.asarray(X_test), jnp.asarray(y_test)))
     w1 = np.asarray(params["enc1"]["w"])
@@ -130,4 +151,6 @@ def train_sae(X_train: np.ndarray, y_train: np.ndarray,
     colsp = 100.0 * (1.0 - live.mean())
     return SAEResult(params=params, test_accuracy=test_acc,
                      column_sparsity=float(colsp),
-                     selected=np.nonzero(live)[0], history=history)
+                     selected=np.nonzero(live)[0], history=history,
+                     compaction_history=compaction_history,
+                     compaction_ratio=_compaction_ratio(params, eval_specs))

@@ -292,3 +292,45 @@ def test_train_cell_projection_adds_no_full_weight_allgather():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_sharded_serve_step_matches_dense():
+    """The shard_map'd compact serving step (sae/serve.make_serve_step with
+    a mesh): batch laid out over the data axis by dist.sharding rules,
+    params replicated, output equal to the dense single-device apply."""
+    out = _run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import ProjectionSpec, apply_constraints
+        from repro.sae import SAEConfig, sae_init, sae_apply, compact_sae
+        from repro.sae.serve import make_serve_step
+
+        cfg = SAEConfig(n_features=512, n_hidden=32, n_classes=2)
+        params = sae_init(jax.random.PRNGKey(0), cfg)
+        spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.2,
+                              axis=1)
+        params = apply_constraints(params, (spec,))
+        compact = compact_sae(params, (spec,))
+        assert 0 < compact.n_selected < 512
+
+        mesh = jax.make_mesh((8,), ("data",))
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 512)),
+                        jnp.float32)
+        step = make_serve_step(compact, mesh=mesh)
+        z_c, xh_c = step(compact.params, x)
+        z_d, xh_d = sae_apply(params, x)
+        np.testing.assert_allclose(np.asarray(z_c), np.asarray(z_d),
+                                   rtol=0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(xh_c),
+                                   np.asarray(xh_d)[:, compact.sel],
+                                   rtol=0, atol=1e-5)
+
+        # serving is embarrassingly row-parallel: the compiled step must
+        # contain no cross-rank collectives at all
+        import re
+        hlo = step.lower(compact.params, x).compile().as_text()
+        for op in ("all-gather", "all-reduce", "all-to-all",
+                   "collective-permute"):
+            assert not re.search(op, hlo), op
+        print("OK")
+    """)
+    assert "OK" in out

@@ -1,0 +1,216 @@
+"""Compacted SAE serving (sae/serve.py, DESIGN.md §9): support derivation,
+compact-vs-dense exactness on the support, and the edge cases — all-dead
+leaf, zero-dead leaf (identity compaction), bf16 params, stacked (ndim > 2)
+encoder leaves, and equality under jit."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ProjectionSpec, apply_constraints, compact_columns,
+                        support_indices)
+from repro.sae import (SAEConfig, sae_init, sae_apply, compact_sae,
+                       compact_leaf, support_selection, make_serve_step,
+                       make_classification, train_test_split, train_sae,
+                       SAETrainConfig)
+from repro.sae.serve import LeafSupport
+
+
+def _projected_params(d=256, h=24, radius=0.25, seed=0, dtype=jnp.float32):
+    cfg = SAEConfig(n_features=d, n_hidden=h, n_classes=2)
+    params = sae_init(jax.random.PRNGKey(seed), cfg)
+    params = jax.tree_util.tree_map(lambda p: p.astype(dtype), params)
+    spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=radius,
+                          axis=1)
+    return apply_constraints(params, (spec,)), spec
+
+
+def test_support_matches_structural_zeros():
+    params, spec = _projected_params()
+    sup = support_selection(params, (spec,))["enc1/w"]
+    w = np.asarray(params["enc1"]["w"])
+    alive = np.any(w != 0, axis=1)
+    np.testing.assert_array_equal(sup.sel, np.nonzero(alive)[0])
+    assert sup.col_axis == 0 and sup.n_cols == w.shape[0]
+    assert 0 < sup.n_selected < sup.n_cols   # the radius actually prunes
+    assert sup.ratio == sup.n_selected / sup.n_cols
+
+
+def test_compact_vs_dense_exact_on_support():
+    params, spec = _projected_params()
+    compact = compact_sae(params, (spec,))
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(32, 256)),
+                    jnp.float32)
+    z_d, xh_d = sae_apply(params, x)
+    z_c, xh_c = compact.apply(compact.select(x))
+    np.testing.assert_allclose(np.asarray(z_c), np.asarray(z_d),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xh_c),
+                               np.asarray(xh_d)[:, compact.sel],
+                               rtol=0, atol=1e-5)
+    # decoder-row co-compaction: output width equals the selected count
+    assert xh_c.shape == (32, compact.n_selected)
+
+
+def test_compact_vs_dense_under_jit():
+    params, spec = _projected_params()
+    compact = compact_sae(params, (spec,))
+    step = make_serve_step(compact)          # jit'd, takes FULL-width x
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(8, 256)),
+                    jnp.float32)
+    z_c, xh_c = step(compact.params, x)
+    z_d, xh_d = sae_apply(params, x)
+    np.testing.assert_allclose(np.asarray(z_c), np.asarray(z_d),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xh_c),
+                               np.asarray(xh_d)[:, compact.sel],
+                               rtol=0, atol=1e-5)
+    # second call with fresh params of the same shapes must not retrace
+    step(compact.params, x + 1.0)
+
+
+def test_all_columns_dead_leaf():
+    params, spec = _projected_params()
+    params["enc1"]["w"] = jnp.zeros_like(params["enc1"]["w"])
+    compact = compact_sae(params, (spec,))
+    assert compact.n_selected == 0 and compact.compaction_ratio == 0.0
+    assert compact.params["enc1"]["w"].shape == (0, 24)
+    x = jnp.ones((4, 256), jnp.float32)
+    z_c, xh_c = compact.apply(compact.select(x))   # (4, 0) input: bias-only
+    z_d, _ = sae_apply(params, x)
+    np.testing.assert_allclose(np.asarray(z_c), np.asarray(z_d),
+                               rtol=0, atol=1e-6)
+    assert xh_c.shape == (4, 0)
+
+
+def test_zero_dead_leaf_identity():
+    params, spec = _projected_params(radius=1e9)   # inside the ball
+    compact = compact_sae(params, (spec,))
+    assert compact.n_selected == compact.n_features
+    np.testing.assert_array_equal(compact.sel, np.arange(256))
+    np.testing.assert_array_equal(np.asarray(compact.params["enc1"]["w"]),
+                                  np.asarray(params["enc1"]["w"]))
+    np.testing.assert_array_equal(np.asarray(compact.params["dec2"]["w"]),
+                                  np.asarray(params["dec2"]["w"]))
+
+
+def test_bf16_params_roundtrip():
+    params, spec = _projected_params(dtype=jnp.bfloat16)
+    compact = compact_sae(params, (spec,))
+    assert compact.params["enc1"]["w"].dtype == jnp.bfloat16
+    assert compact.params["dec2"]["w"].dtype == jnp.bfloat16
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(8, 256)),
+                    jnp.bfloat16)
+    z_d, xh_d = sae_apply(params, x)
+    z_c, xh_c = compact.apply(compact.select(x))
+    # bf16 accumulation order differs between the two GEMM widths
+    np.testing.assert_allclose(np.asarray(z_c, np.float32),
+                               np.asarray(z_d, np.float32),
+                               rtol=0, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(xh_c, np.float32),
+                               np.asarray(xh_d, np.float32)[:, compact.sel],
+                               rtol=0, atol=5e-2)
+
+
+def test_stacked_leaf_union_support():
+    """ndim > 2 leaves compact by the UNION of their slices' supports."""
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(3, 16, 8)).astype(np.float32)    # (L, d, h)
+    w[:, 2, :] = 0.0          # dead feature in EVERY slice -> dropped
+    w[0, 5, :] = 0.0          # dead in one slice only -> kept (union)
+    params = {"enc1": {"w": jnp.asarray(w)}}
+    spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=1e9,
+                          axis=1)
+    sup = support_selection(params, (spec,))["enc1/w"]
+    assert sup.col_axis == 1 and sup.n_cols == 16
+    assert 2 not in sup.sel and 5 in sup.sel
+    assert sup.n_selected == 15
+    wc = compact_leaf(params["enc1"]["w"], sup)
+    assert wc.shape == (3, 15, 8)
+    np.testing.assert_array_equal(np.asarray(wc), w[:, sup.sel, :])
+
+
+def test_support_helpers_roundtrip():
+    support = np.array([True, False, True, True, False])
+    idx = support_indices(support)
+    np.testing.assert_array_equal(idx, [0, 2, 3])
+    x = jnp.arange(20, dtype=jnp.float32).reshape(4, 5)
+    np.testing.assert_array_equal(np.asarray(compact_columns(x, idx, axis=1)),
+                                  np.asarray(x)[:, idx])
+
+
+def test_hidden_axis_refused():
+    params, _ = _projected_params()
+    spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.25,
+                          axis=0)   # max over features -> prunes hidden
+    with pytest.raises(ValueError, match="hidden"):
+        compact_sae(params, (spec,))
+
+
+def test_no_matching_leaf_refused():
+    params, _ = _projected_params()
+    spec = ProjectionSpec(pattern=r"nonexistent", norm="l1inf", radius=0.25,
+                          axis=1)
+    with pytest.raises(ValueError, match="enc1/w"):
+        compact_sae(params, (spec,))
+
+
+def test_train_reports_compaction_ratio():
+    """The sae/train.py eval path: per-epoch compaction ratio reaches the
+    final serving width and matches what compact_sae actually keeps."""
+    X, y, _ = make_classification(n_samples=200, n_features=128,
+                                  n_informative=8, class_sep=1.5, seed=7)
+    X = (X - X.mean(0)) / (X.std(0) + 1e-6)
+    Xtr, ytr, Xte, yte = train_test_split(X, y, 0.25, seed=0)
+    spec = ProjectionSpec(pattern=r"enc1/w", norm="l1inf", radius=0.3,
+                          axis=1)
+    res = train_sae(Xtr, ytr, Xte, yte,
+                    SAEConfig(n_features=128, n_hidden=16, n_classes=2),
+                    SAETrainConfig(epochs=6, lr=2e-3, projection=spec,
+                                   seed=0))
+    assert [name for name, _ in res.compaction_history] == \
+        ["descent1", "descent2"]
+    for _, ratios in res.compaction_history:
+        assert len(ratios) == 6
+        assert all(0.0 <= r <= 1.0 for r in ratios)
+    compact = compact_sae(res.params, (spec,))
+    assert res.compaction_ratio == pytest.approx(compact.compaction_ratio)
+    assert res.compaction_ratio == pytest.approx(
+        res.compaction_history[-1][1][-1])
+    # unconstrained baseline reports the trivial ratio
+    res0 = train_sae(Xtr, ytr, Xte, yte,
+                     SAEConfig(n_features=128, n_hidden=16, n_classes=2),
+                     SAETrainConfig(epochs=2, lr=2e-3, projection=None,
+                                    seed=0))
+    assert res0.compaction_ratio == 1.0
+
+
+def test_serve_step_follows_refreshed_support():
+    """The support rides in the param tree: an old jit'd step fed a
+    refreshed CompactSAE with the SAME J but a DIFFERENT surviving set
+    serves the refreshed model correctly (no stale-closure gather)."""
+    params, spec = _projected_params()
+    # a second checkpoint with the support shifted by one feature index:
+    # same J, different selected set, identical shapes (no retrace)
+    params2 = {
+        "enc1": {"w": jnp.roll(params["enc1"]["w"], 1, axis=0),
+                 "b": params["enc1"]["b"]},
+        "enc2": params["enc2"], "dec1": params["dec1"],
+        "dec2": {"w": jnp.roll(params["dec2"]["w"], 1, axis=1),
+                 "b": jnp.roll(params["dec2"]["b"], 1)},
+    }
+    c1 = compact_sae(params, (spec,))
+    c2 = compact_sae(params2, (spec,))
+    assert c1.n_selected == c2.n_selected
+    assert not np.array_equal(c1.sel, c2.sel)
+    x = jnp.asarray(np.random.default_rng(6).normal(size=(8, 256)),
+                    jnp.float32)
+    step = make_serve_step(c1)
+    step(c1.params, x)                       # compile against checkpoint 1
+    z_c, xh_c = step(c2.params, x)           # refresh: same step, new support
+    z_d, xh_d = sae_apply(params2, x)
+    np.testing.assert_allclose(np.asarray(z_c), np.asarray(z_d),
+                               rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(xh_c),
+                               np.asarray(xh_d)[:, c2.sel],
+                               rtol=0, atol=1e-5)
