@@ -27,7 +27,7 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from . import proj_bench, sae_bench, serve_bench
+    from . import proj_bench, sae_bench, serve_bench, zoo_serve_bench
 
     benches = []
     if args.quick:
@@ -39,6 +39,8 @@ def main() -> None:
             ("proj_families", lambda: proj_bench.families_report(quick=True)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=True)),
             ("serve", lambda: serve_bench.serve_report(quick=True)),
+            ("zoo_serve",
+             lambda: zoo_serve_bench.zoo_serve_report(quick=True)),
         ]
     else:
         benches = [
@@ -51,6 +53,8 @@ def main() -> None:
              lambda: proj_bench.families_report(quick=False)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=False)),
             ("serve", lambda: serve_bench.serve_report(quick=False)),
+            ("zoo_serve",
+             lambda: zoo_serve_bench.zoo_serve_report(quick=False)),
             ("table1", lambda: sae_bench.table1_synthetic(full=args.full)),
             ("table2", sae_bench.table2_lung),
             ("fig5-8", sae_bench.fig_radius_curves),

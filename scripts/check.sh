@@ -7,15 +7,19 @@
 #                                  # runs benchmarks/run.py --quick, emits
 #                                  # BENCH_proj.json + BENCH_families.json +
 #                                  # BENCH_dist_proj.json + BENCH_serve.json
-#                                  # (CI uploads all as artifacts), fails if
-#                                  # the packed-batch path is >1.15x slower
-#                                  # than per-matrix, the sharded engine is
-#                                  # >1.15x the replicated solve on the 8-way
-#                                  # host mesh, the bilevel family is >1.0x
-#                                  # plain at the high-sparsity regime, or
-#                                  # the compacted SAE serving step costs
-#                                  # >0.25x the dense encoder GEMM FLOPs at
-#                                  # the ~99% column-sparsity regime
+#                                  # + BENCH_zoo_serve.json (CI uploads all
+#                                  # as artifacts), fails if the packed-batch
+#                                  # path is >1.15x slower than per-matrix,
+#                                  # the sharded engine is >1.15x the
+#                                  # replicated solve on the 8-way host mesh,
+#                                  # the bilevel family is >1.0x plain at the
+#                                  # high-sparsity regime, the compacted SAE
+#                                  # serving step costs >0.25x the dense
+#                                  # encoder GEMM FLOPs at the ~99%
+#                                  # column-sparsity regime, or the zoo
+#                                  # compact decode is <2x dense tokens/sec,
+#                                  # not exact to 1e-4, or retraces across
+#                                  # hot refresh / live re-compaction
 #
 # The docs check (scripts/check_docs.py) enforces the public-API docstring
 # contract (every exported symbol of the audited modules carries a
@@ -33,9 +37,10 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # exits 0); removing the artifacts first guarantees the gate below
     # reads THIS run's numbers or fails loudly — never stale files
     rm -f BENCH_proj.json BENCH_families.json BENCH_dist_proj.json \
-          BENCH_serve.json
+          BENCH_serve.json BENCH_zoo_serve.json
     python -m benchmarks.run --quick --only proj_
     python -m benchmarks.run --quick --only serve
+    python -m benchmarks.run --quick --only zoo_serve
     python - <<'PYEOF'
 import json
 d = json.load(open("BENCH_proj.json"))
@@ -95,6 +100,29 @@ assert sz <= 1e-4 and sx <= 1e-4, (
     f"compact serve != dense on support (z {sz:.2e}, xhat {sx:.2e})")
 print(f"serve bench smoke OK: colsp {colsp:.1f}%, compact/dense encoder "
       f"FLOPs {fratio:.4f}x, max diff {max(sz, sx):.2e}")
+
+zd = json.load(open("BENCH_zoo_serve.json"))
+zcolsp = zd["regime"]["column_sparsity_pct"]
+speedup = zd["throughput"]["speedup_compact_vs_dense"]
+zdiff = zd["exactness"]["max_abs_diff_logits"]
+retr = zd["recompiles"]["extra_after_refresh_and_recompact"]
+# the PR-6 zoo serving claim: at the ~99% column-sparsity regime the
+# compact decode step (MLP-dominated shape) is >= 2x dense tokens/sec —
+# measured ~5-7x on the quick CPU shape, so the 2x gate keeps headroom
+# against timing noise; the regime assertion keeps it honest. Scatter-back
+# is on the measured path, so the 1e-4 exactness gate covers it (measured
+# ~1e-8: the gathered GEMMs sum the same nonzero terms). Hot refresh and
+# live re-compaction are shape-preserving by the slot design — any extra
+# trace is a contract violation, gated at exactly zero.
+assert zcolsp >= 95.0, (
+    f"zoo serve regime drifted: colsp {zcolsp:.1f}% < 95%")
+assert speedup >= 2.0, (
+    f"zoo compact decode is {speedup:.2f}x dense (<2x gate)")
+assert zdiff <= 1e-4, f"zoo compact forward != dense ({zdiff:.3e})"
+assert retr == 0, (
+    f"{retr} retrace(s) across hot refresh + live re-compaction")
+print(f"zoo serve bench smoke OK: colsp {zcolsp:.1f}%, compact "
+      f"{speedup:.1f}x dense tok/s, max diff {zdiff:.2e}, 0 retraces")
 PYEOF
     exit 0
 fi

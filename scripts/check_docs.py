@@ -36,6 +36,8 @@ AUDITED_MODULES = [
     "src/repro/core/constraints.py",
     "src/repro/dist/projection.py",
     "src/repro/sae/serve.py",
+    "src/repro/serve/compact.py",
+    "src/repro/serve/refresh.py",
 ]
 
 ANCHOR_SCAN_GLOBS = [

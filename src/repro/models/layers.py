@@ -96,6 +96,26 @@ def sinusoidal_positions(S: int, d: int, offset=0) -> jnp.ndarray:
 
 # ----------------------------- MLP ------------------------------------------
 
+def scatter_residual(y: jnp.ndarray, sel: jnp.ndarray,
+                     width: int) -> jnp.ndarray:
+    """Scatter a compact residual contribution back to full width.
+
+    ``y``: (..., J) — a GEMM output computed only on the J surviving
+    residual-output columns of a compacted ``w2`` (serve layer, DESIGN.md
+    §10); ``sel``: int32 (J,) column indices; ``width``: the full residual
+    width. Returns (..., width) with ``y[..., j]`` placed at column
+    ``sel[j]`` and exact zeros elsewhere — exactly what the dense GEMM
+    produces, because a structurally-dead output column contributes exact
+    zero. Uses ``.add`` (not ``.set``) so the padded slots a live
+    re-compaction leaves behind — duplicate indices pointing at one dead
+    column — accumulate their exact-zero contributions harmlessly.
+
+    >>> y_full = scatter_residual(h @ w2_compact, sel, d_model)
+    """
+    out = jnp.zeros(y.shape[:-1] + (width,), y.dtype)
+    return out.at[..., sel].add(y)
+
+
 def mlp_layout(d: int, ff: int, kind: str = "swiglu"):
     if kind in ("swiglu", "geglu"):
         return {"w1": PM((d, ff), ("fsdp", "mlp"), init="scaled"),
@@ -114,7 +134,13 @@ def mlp_apply(params, x, kind: str = "swiglu"):
     else:
         h = jax.nn.gelu(x @ params["w1"])
     h = shard(h, "batch", "seq", "mlp")
-    return h @ params["w2"]
+    out = h @ params["w2"]
+    # compact-serving path (DESIGN.md §10): a w2 whose residual-output
+    # columns were compiled out yields a narrow GEMM; the shape mismatch is
+    # static, so the dense path compiles with zero overhead
+    if out.shape[-1] != x.shape[-1]:
+        out = scatter_residual(out, params["w2_sel"], x.shape[-1])
+    return out
 
 
 # ----------------------------- embeddings -----------------------------------

@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from .param import PM
-from .layers import mlp_layout, mlp_apply
+from .layers import mlp_layout, mlp_apply, scatter_residual
 from ..dist.sharding import shard
 
 
@@ -89,6 +89,11 @@ def moe_apply(params, x: jnp.ndarray, *, n_experts: int, top_k: int,
     act = jax.nn.silu(h1) if mlp_kind == "swiglu" else jax.nn.gelu(h1)
     hidden = shard(act * h3, e_ax, "expert_cap", f_ax)
     out_buf = jnp.einsum("ecf,efd->ecd", hidden, params["w2"])
+    # compact-serving path (DESIGN.md §10): expert w2 with residual-output
+    # columns compiled out produces a narrow buffer; scatter back to d so
+    # the combine below stays width-invariant (static shape test)
+    if out_buf.shape[-1] != d:
+        out_buf = scatter_residual(out_buf, params["w2_sel"], d)
     out_buf = shard(out_buf, e_ax, "expert_cap", "embed")
 
     # ---- combine --------------------------------------------------------

@@ -7,26 +7,14 @@ step writes the projection output into the weight, so a dead column is an
 exact-zero row of ``enc1/w``, not a small number). Serving the dense encoder
 then wastes ~100x the GEMM FLOPs on rows that contribute exact zeros.
 
-This module is the serving path (DESIGN.md §9):
-
-  * ``support_selection(params, specs)`` derives the per-leaf surviving
-    column sets from ``core.constraints.column_masks`` — the SAME mask the
-    double-descent freeze uses, so training and serving can never disagree
-    on the support;
-  * ``compact_leaf`` gathers the surviving columns of one leaf into a dense
-    compact matrix (``core.support_indices`` + ``core.compact_columns`` —
-    the host-side twins of the engine's ``active_compaction``);
-  * ``compact_sae(params, specs)`` builds a ``CompactSAE``: the encoder's
-    surviving feature rows gathered into a dense (J, h) matrix, the decoder
-    OUTPUT columns co-compacted with the same index vector (so the served
-    reconstruction covers exactly the selected features), biases/interior
-    layers untouched;
-  * ``CompactSAE.apply`` is bit-exact (to fp summation order) with the dense
-    ``sae_apply`` on the support: logits Z match everywhere, the
-    reconstruction matches on the selected features;
-  * ``make_serve_step`` wires the batched jit serving step — full-width
-    inputs in, one static gather, compact GEMMs — optionally shard_map'd
-    over a mesh with the batch laid out by ``dist.sharding.default_rules``.
+Since PR 6 this module is a thin ADAPTER over the model-generic compaction
+layer (``repro.serve``, DESIGN.md §10): the SAE's coupling — encoder
+feature rows primary, decoder output columns + bias co-compacted, the
+``sel`` leaf at the tree root — is one ``CompactRule``, and
+``compact_sae`` is ``serve.compact.compact_model`` under that rule.
+``support_selection``/``LeafSupport`` live in ``repro.serve.compact`` and
+are re-imported here for compatibility; ``compact_leaf`` is a one-line
+shim over the single core gather primitive ``core.compact_columns``.
 
 Why only the FEATURE axis compacts: a dead feature row of ``enc1/w``
 removes its input exactly because ``x @ W1`` is linear in the rows. The
@@ -38,92 +26,42 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from ..core.constraints import (ProjectionSpec, column_masks, leaf_path_str,
-                                _first_match, _stacked_axis)
-from ..core.l1inf import compact_columns, support_indices
+from ..core.constraints import ProjectionSpec
+from ..core.l1inf import compact_columns
+from ..serve.compact import (CompactRule, LeafSupport, compact_model,
+                             support_selection)
 from .model import sae_apply
 
-__all__ = ["LeafSupport", "support_selection", "compact_leaf", "CompactSAE",
-           "compact_sae", "make_serve_step"]
+__all__ = ["compact_leaf", "CompactSAE", "compact_sae", "make_serve_step"]
 
-
-@dataclasses.dataclass(frozen=True)
-class LeafSupport:
-    """Surviving-column set of one constrained leaf (all fields static).
-
-    ``sel``: int32 (J,) surviving canonical-column indices (ascending);
-    ``col_axis``: the axis of the ORIGINAL leaf the columns live on (the
-    non-max axis of the trailing 2-D slice — stacked leading dims shift it);
-    ``n_cols``: the full column count m, so ``ratio = J / m``.
-
-    >>> LeafSupport(sel=np.array([0, 2], np.int32), col_axis=0, n_cols=4).ratio
-    0.5
-    """
-    sel: np.ndarray
-    col_axis: int
-    n_cols: int
-
-    @property
-    def n_selected(self) -> int:
-        """J — the number of surviving columns (static Python int)."""
-        return int(self.sel.size)
-
-    @property
-    def ratio(self) -> float:
-        """Compaction ratio J / m in [0, 1] (1.0 = nothing pruned)."""
-        return self.n_selected / max(self.n_cols, 1)
-
-
-def support_selection(params: Any, specs: Sequence[ProjectionSpec]
-                      ) -> Dict[str, LeafSupport]:
-    """Derive {leaf path: LeafSupport} for every spec-matching leaf.
-
-    ``params``: param pytree (leaves of any float dtype); ``specs``: the
-    SAME ProjectionSpec tuple the model trained under. The support comes
-    from ``column_masks`` — the structural-zero contract (DESIGN.md §9): a
-    column the projection killed is an exact-zero slice, so the mask test
-    is exact, not a tolerance. A stacked (ndim > 2) leaf keeps the UNION
-    of its slices' supports (a column dropped only where it is zero in
-    EVERY slice — the gather stays exact and the compact leaf stays
-    rectangular). Host-side: call at compaction time, not inside jit.
-
-    >>> sup = support_selection(params, specs)["enc1/w"]
-    """
-    masks = column_masks(params, specs)
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    mflat = jax.tree_util.tree_flatten_with_path(masks)[0]
-    out: Dict[str, LeafSupport] = {}
-    for (path, leaf), (_, mask) in zip(flat, mflat):
-        spec = _first_match(specs, leaf_path_str(path), leaf)
-        if spec is None:
-            continue
-        max_axis = _stacked_axis(spec.axis, leaf.ndim)
-        col_axis = leaf.ndim - 2 if spec.axis in (1, -1) else leaf.ndim - 1
-        # one representative row per column (the mask is constant along the
-        # max axis), then union over any stacked leading dims
-        alive = np.asarray(jnp.take(mask, 0, axis=max_axis)) != 0
-        alive = alive.reshape(-1, leaf.shape[col_axis]).any(axis=0)
-        out[leaf_path_str(path)] = LeafSupport(
-            sel=support_indices(alive), col_axis=col_axis,
-            n_cols=int(leaf.shape[col_axis]))
-    return out
+# The SAE's compaction coupling under the generic contract (DESIGN.md §10):
+# enc1/w's FEATURE rows are the primary columns (canonical axis -2 of the
+# (d, h) encoder); the reconstruction head addresses the same feature index
+# space, so dec2/w output columns and dec2/b co-gather; the sel leaf rides
+# at the tree root (the PR-5 checkpoint contract).
+_SAE_RULES: Tuple[CompactRule, ...] = (
+    CompactRule(primary=r"(^|/)enc1/w$", col_axis=-2,
+                coupled=(("../dec2/w", -1), ("../dec2/b", -1)),
+                sel_key="../sel"),
+)
 
 
 def compact_leaf(leaf: jnp.ndarray, sup: LeafSupport) -> jnp.ndarray:
     """Gather one leaf's surviving columns into a dense compact array.
 
-    ``leaf``: (..., n, m)-shaped (any float dtype, stacked dims allowed);
-    ``sup``: its ``LeafSupport``. Returns the leaf with ``sup.col_axis``
-    reduced from m to J, dtype preserved. Zero-dead support is the
-    identity gather; an all-dead support returns a zero-width axis (jax
-    matmuls against it produce exact zeros, so serving still works).
+    One-line shim over the single core gather primitive
+    ``core.compact_columns`` (kept for API compatibility — the generic
+    layer and this adapter share that primitive, so there is exactly one
+    compaction implementation). ``leaf``: (..., n, m)-shaped (any float
+    dtype, stacked dims allowed); ``sup``: its ``LeafSupport``. Returns the
+    leaf with ``sup.col_axis`` reduced from m to J, dtype preserved.
 
     >>> w_c = compact_leaf(params["enc1"]["w"], sup)   # (d, h) -> (J, h)
     """
@@ -184,7 +122,8 @@ def compact_sae(params: Dict[str, Any],
     hidden units still emit relu(b) — refused with ValueError). Returns a
     ``CompactSAE`` whose ``apply`` matches dense ``sae_apply`` on the
     support. Host-side, one-off: run once per checkpoint, then serve the
-    result via ``make_serve_step``.
+    result via ``make_serve_step``. Implementation: the generic
+    ``serve.compact.compact_model`` under the SAE coupling rule.
 
     >>> compact = compact_sae(result.params, (spec,))
     """
@@ -194,29 +133,15 @@ def compact_sae(params: Dict[str, Any],
         raise ValueError(
             f"specs select no enc1/w leaf (matched: {sorted(sups)} — "
             f"compact_sae serves the paper's encoder feature selection)")
-    sup = sups[enc_key]
-    d, h = params["enc1"]["w"].shape
-    if sup.col_axis != 0:
+    if sups[enc_key].col_axis != params["enc1"]["w"].ndim - 2:
         raise ValueError(
             "compact_sae: spec prunes the hidden axis of enc1/w — dead "
             "hidden units still contribute relu(b1) so compaction would "
             "not be exact; the serving contract covers the feature axis "
             "(spec.axis in (1, -1) on the (d, h) encoder)")
-    sel = sup.sel
-    out = {
-        "enc1": {"w": compact_leaf(params["enc1"]["w"], sup),
-                 "b": params["enc1"]["b"]},
-        "enc2": params["enc2"],
-        "dec1": params["dec1"],
-        # decoder-row co-compaction: the reconstruction head's OUTPUT
-        # features are the same index space as the encoder's input features
-        "dec2": {"w": compact_columns(params["dec2"]["w"], sel, axis=1),
-                 "b": compact_columns(params["dec2"]["b"], sel, axis=0)},
-        # the support rides in the param tree (sae_apply ignores it): a
-        # checkpoint refresh hands the serving step its own gather indices
-        "sel": jnp.asarray(sel, jnp.int32),
-    }
-    return CompactSAE(params=out, sel=sel, n_features=int(d))
+    cm = compact_model(params, specs, rules=_SAE_RULES)
+    d = int(params["enc1"]["w"].shape[params["enc1"]["w"].ndim - 2])
+    return CompactSAE(params=cm.params, sel=cm.sels[enc_key], n_features=d)
 
 
 def make_serve_step(compact: CompactSAE, *, mesh=None, rules=None):

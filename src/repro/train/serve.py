@@ -4,18 +4,35 @@ The decode step is the same jit'd ``decode_step`` the dry-run lowers; the
 server adds greedy/temperature sampling and a simple continuous-batching
 slot manager (finished rows are replaced by queued requests without
 recompiling — the cache is a fixed-shape ring of slots).
+
+Ragged prompts run CONTINUOUSLY per row: every row feeds its own next
+token at every position — prompt tokens while the prompt lasts, then its
+own samples — so a short row never feeds pad tokens into its cache and a
+ragged batch reproduces the single-prompt outputs exactly (regression:
+tests/test_zoo_serve.py).
+
+Compact serving (DESIGN.md §10): ``load_compact`` serves a
+``serve.CompactModel`` through the SAME jit'd step (the sel index leaves
+ride in the param tree, and the compact widths are just different static
+shapes); ``refresh`` hot-swaps a new dense checkpoint through the frozen
+gather recipe and ``recompact`` runs live re-compaction — both are
+shape-preserving, so neither retraces (``n_traces`` exposes the counter
+the no-retrace tests assert on).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+from typing import Any, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..models.zoo import Model
 from ..models.transformer import init_cache, decode_step
+from ..serve import CompactModel, compact_model, refresh_model, \
+    recompact_model
 
 
 @dataclasses.dataclass
@@ -25,60 +42,140 @@ class ServeConfig:
     seed: int = 0
 
 
-class BatchServer:
-    """Fixed B decode slots; requests are prompts (lists of token ids)."""
+def _cache_specs(cache, batch_axes):
+    """Per-leaf PartitionSpecs sharding the batch dim of a decode cache:
+    axis 1 for scan-stacked block caches (leading dim = cycles), axis 0
+    for unstacked remainder blocks."""
+    out = {}
+    for key, sub in cache.items():
+        spec = P(None, batch_axes) if key == "blocks" else P(batch_axes)
+        out[key] = jax.tree_util.tree_map(lambda _: spec, sub)
+    return out
 
-    def __init__(self, model: Model, batch_slots: int, scfg: ServeConfig):
+
+class BatchServer:
+    """Fixed B decode slots; requests are prompts (lists of token ids).
+
+    ``mesh`` (optional) turns the decode step into a shard_map over the
+    mesh axes the sharding rules assign to "batch" (params replicated,
+    cache + tokens batch-sharded; rows are independent, so the step body
+    contains zero collectives — asserted in tests/test_multidevice.py).
+    """
+
+    def __init__(self, model: Model, batch_slots: int, scfg: ServeConfig,
+                 mesh=None, rules=None):
         self.model = model
         self.cfg = model.cfg
         self.scfg = scfg
         self.B = batch_slots
         self.params = None
-        self._step = jax.jit(
-            lambda p, c, t, pos: decode_step(p, c, t, pos, self.cfg))
+        self.compact: Optional[CompactModel] = None
+        self.n_traces = 0            # bumps at TRACE time only (jit)
+        self._mesh = mesh
+        self._rules = rules
+        self._step = None            # built lazily: cache specs need shapes
+
+    # ---------------------- checkpoint lifecycle -------------------------
 
     def load(self, params):
+        """Serve a dense checkpoint (drops any compact state)."""
         self.params = params
+        self.compact = None
+
+    def load_compact(self, compact: Optional[CompactModel] = None, *,
+                     params=None):
+        """Serve a compacted checkpoint. Pass a prebuilt
+        ``serve.CompactModel``, or a dense ``params`` tree to compact here
+        under the model's own ``projection_specs``."""
+        if compact is None:
+            compact = compact_model(params, self.cfg.projection_specs)
+        self.compact = compact
+        self.params = compact.params
+
+    def refresh(self, new_dense_params):
+        """Hot refresh: re-gather a NEW dense checkpoint through the frozen
+        compact recipe. Shapes unchanged — the jit'd step never retraces."""
+        self.compact = refresh_model(self.compact, new_dense_params)
+        self.params = self.compact.params
+
+    def recompact(self, new_dense_params):
+        """Live re-compaction: adopt the new checkpoint's (monotonically
+        smaller) support inside the frozen slot widths. No retrace."""
+        self.compact = recompact_model(self.compact, new_dense_params)
+        self.params = self.compact.params
+
+    # ---------------------- step construction ---------------------------
+
+    def _build_step(self, cache):
+        def traced(p, c, t, pos):
+            self.n_traces += 1       # python side effect: trace-time only
+            return decode_step(p, c, t, pos, self.cfg)
+
+        if self._mesh is None:
+            return jax.jit(traced)
+
+        from jax.experimental.shard_map import shard_map
+        from ..dist.sharding import default_rules
+        rules = dict(default_rules() if self._rules is None else self._rules)
+        batch_axes = rules.get("batch")
+        if batch_axes is None:
+            raise ValueError(
+                "BatchServer: the sharding rules map 'batch' to None — "
+                "every rank would redundantly serve the FULL batch; name a "
+                "mesh axis for 'batch' (see dist.sharding.default_rules)")
+        cspecs = _cache_specs(cache, batch_axes)
+        fn = shard_map(traced, mesh=self._mesh,
+                       in_specs=(P(), cspecs, P(batch_axes), P()),
+                       out_specs=(P(batch_axes), cspecs),
+                       check_rep=False)
+        return jax.jit(fn)
+
+    # ---------------------- generation ----------------------------------
 
     def generate(self, prompts: List[List[int]],
                  max_new: int = 32) -> List[List[int]]:
-        """Greedy/temperature generation for up to B prompts (padded batch).
+        """Greedy/temperature generation for up to B prompts.
         Prefill is performed by stepping the cache through the prompt tokens
         (teacher forcing) — exactly the decode path, so serving exercises the
-        same compiled step as the dry-run."""
+        same compiled step as the dry-run. Rows advance independently: row i
+        samples its first token the step its LAST prompt token goes in, and
+        feeds its own samples from then on, so ragged batches never see pad
+        tokens and match the uniform-length outputs exactly."""
         assert len(prompts) <= self.B
         B = self.B
         Smax = self.scfg.max_seq
         cache = init_cache(self.cfg, B, Smax, jnp.float32)
+        if self._step is None:
+            self._step = self._build_step(cache)
         key = jax.random.PRNGKey(self.scfg.seed)
 
-        maxlen = max(len(p) for p in prompts)
-        toks = np.zeros((B, maxlen), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, :len(p)] = p  # left-aligned; short prompts re-feed pads
-
-        logits = None
-        for pos in range(maxlen):
-            t = jnp.asarray(toks[:, pos:pos + 1])
-            logits, cache = self._step(self.params, cache, t,
-                                       jnp.asarray(pos))
-
+        lens = [len(p) for p in prompts] + [1] * (B - len(prompts))
+        maxlen = max(lens)
         out = [list(p) for p in prompts] + [[] for _ in range(B - len(prompts))]
-        cur = None
-        for j in range(max_new):
-            pos = maxlen + j
-            if pos >= Smax:
-                break
+        done = [len(prompts) <= i for i in range(B)]
+        feed = np.zeros((B,), np.int32)
+        for i, p in enumerate(prompts):
+            feed[i] = p[0]
+
+        n_new = [0] * B
+        for pos in range(min(Smax, maxlen + max_new - 1)):
+            logits, cache = self._step(self.params, cache,
+                                       jnp.asarray(feed)[:, None],
+                                       jnp.asarray(pos))
             if self.scfg.temperature > 0:
                 key, sub = jax.random.split(key)
                 nxt = jax.random.categorical(
                     sub, logits[:, -1, :] / self.scfg.temperature, axis=-1)
             else:
                 nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-            cur = np.asarray(nxt, np.int32)
-            for i in range(len(prompts)):
-                out[i].append(int(cur[i]))
-            logits, cache = self._step(self.params, cache,
-                                       jnp.asarray(cur)[:, None],
-                                       jnp.asarray(pos))
+            nxt = np.asarray(nxt, np.int32)
+            for i in range(B):
+                if pos + 1 < lens[i]:
+                    feed[i] = out[i][pos + 1]      # still feeding the prompt
+                elif not done[i] and n_new[i] < max_new:
+                    out[i].append(int(nxt[i]))     # row i's own sample
+                    feed[i] = nxt[i]
+                    n_new[i] += 1
+                    if n_new[i] >= max_new:
+                        done[i] = True
         return out[: len(prompts)]

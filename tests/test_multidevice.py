@@ -334,3 +334,56 @@ def test_sharded_serve_step_matches_dense():
         print("OK")
     """)
     assert "OK" in out
+
+
+def test_sharded_zoo_serve_matches_single_device():
+    """BatchServer with a mesh: the shard_map'd compact decode step lays
+    the batch over the data axis (params replicated), produces the same
+    tokens as single-device serving, and — rows being independent —
+    compiles to an HLO with zero cross-rank collectives."""
+    out = _run_subprocess("""
+        import dataclasses, re
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.configs import get_reduced
+        from repro.models.zoo import build
+        from repro.models.transformer import init_cache
+        from repro.core.constraints import ProjectionSpec
+        from repro.train.serve import BatchServer, ServeConfig
+
+        cfg = dataclasses.replace(get_reduced("gemma_7b"), n_layers=2)
+        cfg = dataclasses.replace(cfg, projection_specs=cfg.projection_specs
+            + (ProjectionSpec(pattern="blocks/.*/mlp/w2$", norm="l1inf",
+                              radius=64.0, axis=0, every_k=10),))
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        mlp = params["blocks"]["p0_global"]["mlp"]
+        for name, frac in (("w1", 0.75), ("w2", 0.5)):
+            arr = np.array(mlp[name])
+            dead = rng.choice(arr.shape[2], int(arr.shape[2]*frac),
+                              replace=False)
+            arr[:, :, dead] = 0.0
+            mlp[name] = jnp.asarray(arr)
+
+        prompts = [[1, 2, 3], [4, 5], [7], [8, 9]]
+        ref = BatchServer(model, batch_slots=8, scfg=ServeConfig(max_seq=32))
+        ref.load_compact(params=params)
+        want = ref.generate(prompts, max_new=6)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        srv = BatchServer(model, batch_slots=8, scfg=ServeConfig(max_seq=32),
+                          mesh=mesh)
+        srv.load_compact(params=params)
+        got = srv.generate(prompts, max_new=6)
+        assert got == want, (got, want)
+
+        cache = init_cache(cfg, 8, 32, jnp.float32)
+        hlo = srv._step.lower(srv.params, cache,
+                              jnp.zeros((8, 1), jnp.int32),
+                              jnp.asarray(0)).compile().as_text()
+        for op in ("all-gather", "all-reduce", "all-to-all",
+                   "collective-permute"):
+            assert not re.search(op, hlo), op
+        print("OK")
+    """)
+    assert "OK" in out
