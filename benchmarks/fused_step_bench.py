@@ -1,0 +1,176 @@
+"""Fused optimizer+projection step benchmark (DESIGN.md §11).
+
+Measures the full projected train step — Adam update + l1,inf-family
+projection — with the engine's two solvers on identical inputs:
+
+  * ``unfused`` (solver="newton"): adam writes the updated params, the
+    packer copies them into the packed buffer, the segmented Newton solves,
+    the clip writes them again (>= 14 leaf-buffer visits per step);
+  * ``fused``   (solver="fused"): pass 1 reads (grad, mu, nu, param) once
+    and emits moments + per-column statistics, the Newton runs on
+    O(num_segments) state, pass 2 recomputes the update and writes the
+    clipped params directly (10 leaf-buffer visits, two HBM passes).
+
+Writes ``BENCH_fused_step.json`` (schema in benchmarks/README.md): per
+C_frac regime the measured wall times, the XLA-costed bytes of each step
+(``compiled.cost_analysis()['bytes accessed']``) with their ideal HBM
+times at the roofline bandwidth (``repro.roofline.analysis.HBM_BW``), the
+analytic leaf-visit accounting, and the fused/unfused exactness check.
+``scripts/check.sh --bench-smoke`` gates fused <= 0.8x unfused wall time
+and fused bytes < unfused bytes.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import List, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import ProjectionSpec
+from repro.core.engine import ProjectionEngine
+from repro.optim.adam import AdamConfig, adam_init
+from repro.roofline.analysis import HBM_BW
+
+Row = Tuple[str, float, str]
+
+# per-step leaf-buffer visits over the constrained leaves (DESIGN.md §11):
+# fused   pass1 reads g/m/v/p + writes m/v (6), pass2 reads m/v/p + writes
+#         p (4) = 10;
+# unfused adam reads g/m/v/p + writes p/m/v (7), pack reads p + writes the
+#         packed buffer (2), clip reads the buffer + p-sized write back,
+#         plus the |.| statistics read inside the solve (>= 5) = >= 14.
+FUSED_LEAF_VISITS = 10
+UNFUSED_LEAF_VISITS = 14
+
+
+def _time_pair(fn_a, fn_b, reps: int):
+    """Interleaved A/B medians in us. The gate compares the two numbers, so
+    the samples alternate — load drift on a shared machine hits both sides
+    equally instead of biasing whichever ran second."""
+    fn_a(); fn_b()  # compile + warm
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn_a()
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)) * 1e6, float(np.median(tb)) * 1e6
+
+
+def _step_bytes(jitted, *args):
+    """'bytes accessed' of the compiled step per XLA's cost model, or None."""
+    try:
+        ca = jitted.lower(*args).compile().cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        if ca and "bytes accessed" in ca:
+            return float(ca["bytes accessed"])
+    except Exception:
+        pass
+    return None
+
+
+def fused_step_report(quick: bool = True,
+                      out_path: str = "BENCH_fused_step.json") -> List[Row]:
+    """Fused vs unfused projected step at the three BENCH_proj.json
+    sparsity regimes (C_frac in 0.5 / 0.1 / 0.01).
+
+    The constrained pair mirrors the SAE: an encoder leaf (axis=0) and a
+    decoder-style stack (axis=1). The axis=1 entry is where fusion pays
+    most — the unfused packer materializes a physically TRANSPOSED copy of
+    the leaf into the packed buffer and transposes it back on unpack
+    (strided reads, the dominant cost at these sizes), while the fused
+    passes stream the leaf in its native layout and reduce over the minor
+    axis in-register.
+    """
+    n, m, lead = (256, 1024, 2) if quick else (512, 2048, 4)
+    reps = 15 if quick else 20
+    key = jax.random.PRNGKey(0)
+    params = {
+        "enc1": {"w": jax.random.normal(jax.random.fold_in(key, 0), (n, m))},
+        "blocks": {"w": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (lead, n, m))},
+    }
+    grads = jax.tree_util.tree_map(
+        lambda p: 0.01 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           p.shape), params)
+    acfg = AdamConfig(lr=1e-3)
+    norm = float(jnp.abs(params["enc1"]["w"]).max(axis=0).sum())
+    leaf_bytes = sum(int(np.prod(p.shape)) * 4
+                     for p in jax.tree_util.tree_leaves(params))
+
+    rows: List[Row] = []
+    regimes = []
+    for C_frac in (0.5, 0.1, 0.01):
+        specs = (ProjectionSpec(pattern=r"enc1/w", norm="bilevel",
+                                radius=C_frac * norm),
+                 ProjectionSpec(pattern=r"blocks/w", norm="bilevel",
+                                radius=C_frac * norm, axis=1))
+        out = {}
+        for solver in ("newton", "fused"):
+            eng = ProjectionEngine(specs, solver=solver)
+            opt = adam_init(params, acfg)
+            state = eng.init_state(params)
+            step = jax.jit(lambda g, o, p, s, e=eng: e.projected_update(
+                g, o, p, acfg, state=s))
+            p1, o1, s1 = step(grads, opt, params, state)
+            p1, o1, s1 = step(grads, o1, p1, s1)      # settle the warm start
+            jax.block_until_ready(p1)
+            out[solver] = {
+                "call": (lambda g=grads, o=o1, p=p1, s=s1, f=step:
+                         jax.block_until_ready(f(g, o, p, s))),
+                "bytes": _step_bytes(step, grads, o1, p1, s1),
+                "params": step(grads, o1, p1, s1)[0],
+            }
+        out["newton"]["us"], out["fused"]["us"] = _time_pair(
+            out["newton"]["call"], out["fused"]["call"], reps)
+        diff = max(float(jnp.max(jnp.abs(a - b)))
+                   for a, b in zip(
+                       jax.tree_util.tree_leaves(out["newton"]["params"]),
+                       jax.tree_util.tree_leaves(out["fused"]["params"])))
+        fb, ub = out["fused"]["bytes"], out["newton"]["bytes"]
+        reg = {
+            "C_frac": C_frac,
+            "unfused_us": out["newton"]["us"],
+            "fused_us": out["fused"]["us"],
+            "ratio": out["fused"]["us"] / out["newton"]["us"],
+            "unfused_bytes": ub,
+            "fused_bytes": fb,
+            "bytes_ratio": (fb / ub) if fb and ub else None,
+            # ideal time of each step's costed bytes at the roofline HBM
+            # bandwidth — what the two-pass structure buys on the TPU
+            "unfused_hbm_ideal_us": (ub / HBM_BW * 1e6) if ub else None,
+            "fused_hbm_ideal_us": (fb / HBM_BW * 1e6) if fb else None,
+            "max_abs_diff": diff,
+        }
+        regimes.append(reg)
+        rows.append((f"fused_step/unfused@{n}x{m}", reg["unfused_us"],
+                     f"C_frac={C_frac}"))
+        rows.append((f"fused_step/fused@{n}x{m}", reg["fused_us"],
+                     f"C_frac={C_frac};ratio={reg['ratio']:.3f}"))
+
+    payload = {
+        "meta": {"quick": quick, "shape": [n, m], "lead": lead,
+                 "axes": [0, 1], "backend": jax.default_backend()},
+        "regimes": regimes,
+        "worst_ratio": max(r["ratio"] for r in regimes),
+        "worst_bytes_ratio": max((r["bytes_ratio"] for r in regimes
+                                  if r["bytes_ratio"] is not None),
+                                 default=None),
+        "worst_abs_diff": max(r["max_abs_diff"] for r in regimes),
+        "hbm_accounting": {
+            "fused_leaf_visits": FUSED_LEAF_VISITS,
+            "unfused_leaf_visits": UNFUSED_LEAF_VISITS,
+            "constrained_leaf_bytes": leaf_bytes,
+            "fused_model_bytes": FUSED_LEAF_VISITS * leaf_bytes,
+            "unfused_model_bytes": UNFUSED_LEAF_VISITS * leaf_bytes,
+        },
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return rows

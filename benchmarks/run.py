@@ -27,7 +27,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from . import proj_bench, sae_bench, serve_bench, zoo_serve_bench
+    from . import (fused_step_bench, proj_bench, sae_bench, serve_bench,
+                   zoo_serve_bench)
 
     benches = []
     if args.quick:
@@ -38,6 +39,8 @@ def main() -> None:
             ("proj_engine", lambda: proj_bench.engine_report(quick=True)),
             ("proj_families", lambda: proj_bench.families_report(quick=True)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=True)),
+            ("fused_step",
+             lambda: fused_step_bench.fused_step_report(quick=True)),
             ("serve", lambda: serve_bench.serve_report(quick=True)),
             ("zoo_serve",
              lambda: zoo_serve_bench.zoo_serve_report(quick=True)),
@@ -52,6 +55,8 @@ def main() -> None:
             ("proj_families",
              lambda: proj_bench.families_report(quick=False)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=False)),
+            ("fused_step",
+             lambda: fused_step_bench.fused_step_report(quick=False)),
             ("serve", lambda: serve_bench.serve_report(quick=False)),
             ("zoo_serve",
              lambda: zoo_serve_bench.zoo_serve_report(quick=False)),

@@ -59,12 +59,26 @@ class _BilevelSegOps:
     one-row matrix (b_1 = S_1 = u): active <=> NOT (u < theta), i.e. a
     column exactly at the threshold stays in the tangent with mu = 0 —
     keeping tie behavior identical to the exact solver's n = 1 case.
+
+    This is the family with the OPTIONAL ``from_colstats`` hook: its whole
+    Newton state is the column-max vector, a streaming per-column statistic,
+    so the fused optimizer+projection step (``kernels/fused_step``,
+    DESIGN.md §11) can emit the aux from its first HBM pass without ever
+    materializing the updated matrix. Families whose aux needs per-column
+    sorts/prefix sums (plain/weighted/masked) cannot provide the hook and
+    keep the unfused path.
     """
     uses_weights = False
 
     @staticmethod
     def prepare(A, w=None):
         return {"u": jnp.max(A, axis=0)}
+
+    @staticmethod
+    def from_colstats(colsum, colmax, w=None):
+        # streaming twin of prepare: same aux, built from the per-column
+        # (sum |.|, max |.|) pair a single tiled sweep can accumulate
+        return {"u": colmax}
 
     @staticmethod
     def stats(aux, th_col):

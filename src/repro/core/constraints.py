@@ -323,6 +323,38 @@ class PackedPlan:
                 w[lo : lo + e.m] = np.asarray(e.weights, np.float32)
         return w
 
+    # -- virtual packing (the fused step, DESIGN.md §11) ---------------------
+    # The fused train step never materializes the packed buffer: leaves keep
+    # their own layout and only their O(m) per-column statistics are
+    # concatenated, in entry order, with NO lane padding. These twins of
+    # seg_ids()/col_weights() describe that dense layout.
+
+    def virtual_num_cols(self) -> int:
+        """Column count of the dense (un-lane-padded) statistics vector."""
+        return sum(e.lead * e.m for e in self.entries)
+
+    def virtual_seg_ids(self) -> np.ndarray:
+        """Segment id per dense statistics column (entry order, stacked
+        matrices contiguous, no padding sentinel — every column is real)."""
+        parts = [np.repeat(np.arange(e.lead, dtype=np.int32) + e.seg_start,
+                           e.m)
+                 for e in self.entries]
+        return (np.concatenate(parts) if parts
+                else np.zeros((0,), np.int32))
+
+    def virtual_col_weights(self) -> np.ndarray:
+        """Per-column weights for the dense statistics layout (the
+        ``w_col`` twin of :meth:`col_weights`)."""
+        parts = []
+        for e in self.entries:
+            if e.weights is None:
+                parts.append(np.ones((e.lead * e.m,), np.float32))
+            else:
+                parts.append(np.tile(np.asarray(e.weights, np.float32),
+                                     e.lead))
+        return (np.concatenate(parts) if parts
+                else np.zeros((0,), np.float32))
+
 
 def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
     """Split the leaves into packed plans — one per (constraint family,

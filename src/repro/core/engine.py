@@ -34,11 +34,17 @@ from .constraints import (ProjectionSpec, build_packed_plans, engine_count,
                           _apply_2d, _gated, _pack_entry, _project_fn,
                           _unpack_entry)
 from .families import get_family, project_segmented_family
+from .l1inf import _segmented_newton
 
 __all__ = ["ProjectionEngine", "apply_constraints_packed",
            "init_projection_state"]
 
-_SOLVERS = ("newton", "pallas", "sharded")
+_SOLVERS = ("newton", "pallas", "sharded", "fused")
+
+# Identity sentinel for the fused clip pass: a per-column clip level far
+# above any parameter magnitude, so sign(u) * min(|u|, _MU_INF) == u exactly
+# (segments already inside the ball must pass through untouched).
+_MU_INF = 1e30
 
 
 class ProjectionEngine:
@@ -46,10 +52,15 @@ class ProjectionEngine:
 
     Construct once per step-build (the specs and solver are static); call
     ``apply``/``projected_update`` inside the traced step. ``solver`` is the
-    default for every packed plan ("newton" | "pallas" | "sharded"); ``mesh``
-    is required for "sharded". The engine itself is stateless — the theta
-    warm-start dict returned by ``init_state`` threads through the caller's
-    train state.
+    default for every packed plan ("newton" | "pallas" | "sharded" |
+    "fused"); ``mesh`` is required for "sharded". "fused" runs the
+    two-HBM-pass optimizer+projection megakernel inside
+    ``projected_update`` for every plan whose family provides the
+    ``from_colstats`` streaming hook at ``every_k == 1`` (DESIGN.md §11)
+    and is bit-identical to "newton" everywhere else (``apply`` and all
+    fallback plans solve exactly as "newton" would). The engine itself is
+    stateless — the theta warm-start dict returned by ``init_state``
+    threads through the caller's train state.
 
     >>> engine = ProjectionEngine((spec,)); state = engine.init_state(params)
     """
@@ -84,8 +95,11 @@ class ProjectionEngine:
         (projected-by-leaf-index dict, theta, iters). The constraint family
         named by the plan supplies the per-column Newton statistics
         (``core.families``); a family without a fused-kernel implementation
-        falls back to the packed Newton path under solver='pallas'."""
-        engine_count(f"{plan.key}/{self.solver}")
+        falls back to the packed Newton path under solver='pallas', and
+        plans the fused step cannot take (``projected_update`` dispatches
+        those here) solve exactly as solver='newton'."""
+        eff = "newton" if self.solver == "fused" else self.solver
+        engine_count(f"{plan.key}/{eff}")
         fam = get_family(plan.family)
         if self.solver == "sharded":
             from ..dist.projection import project_plan_sharded
@@ -185,8 +199,30 @@ class ProjectionEngine:
         (the double-descent support freeze — projection may revive a clipped
         column, the mask keeps it dead), and threads the theta state.
 
+        Under ``solver="fused"``, plans whose family streams its Newton
+        statistics (``from_colstats``) at ``every_k == 1`` take the
+        two-HBM-pass fused step instead (``kernels/fused_step``,
+        DESIGN.md §11): pass 1 is the Adam update and the per-column
+        statistics in one read of (grad, mu, nu, param), the segmented
+        Newton runs on O(num_segments) state, pass 2 recomputes the update
+        from the just-written moments and writes the clipped params — the
+        unclipped parameters never reach HBM and no packed buffer exists.
+        Everything else (per-leaf specs, ``every_k``-gated plans, families
+        without the hook) falls back to this unfused path, leaf-exact.
+
         Returns (params, opt_state, proj_state) (+ stats when requested).
         """
+        if self.solver == "fused" and self.specs:
+            plans, per_leaf = self.plans(params)
+            fused_plans = [
+                p for p in plans
+                if p.every_k == 1
+                and hasattr(get_family(p.family).seg_ops, "from_colstats")]
+            if fused_plans:
+                return self._projected_update_fused(
+                    grads, opt_state, params, acfg, lr=lr, mask=mask,
+                    state=state, plans=plans, per_leaf=per_leaf,
+                    fused_plans=fused_plans, with_stats=with_stats)
         from ..optim.adam import adam_update
         new_params, new_opt = adam_update(grads, opt_state, params, acfg,
                                           lr=lr, mask=mask)
@@ -202,6 +238,125 @@ class ProjectionEngine:
         if with_stats:
             return new_params, new_opt, state, stats
         return new_params, new_opt, state
+
+    def _projected_update_fused(self, grads, opt_state, params: Any, acfg,
+                                *, lr, mask, state, plans, per_leaf,
+                                fused_plans, with_stats):
+        """The two-HBM-pass step (DESIGN.md §11). ``fused_plans`` take the
+        megakernel; every other plan/leaf replays the unfused path on the
+        already-updated leaves, so mixed spec lists stay exact."""
+        from ..optim.adam import (AdamState, adam_leaf_update, adam_scalars,
+                                  clip_scale)
+        from ..kernels.fused_step import (fused_adam_clip_apply,
+                                          fused_adam_colstats)
+
+        p_leaves, treedef = jax.tree_util.tree_flatten(params)
+        g_leaves = jax.tree_util.tree_leaves(grads)
+        m_leaves = jax.tree_util.tree_leaves(opt_state.mu)
+        v_leaves = jax.tree_util.tree_leaves(opt_state.nu)
+        mk_leaves = (jax.tree_util.tree_leaves(mask) if mask is not None
+                     else [None] * len(p_leaves))
+
+        count = opt_state.count + 1
+        lr_t, b1c, b2c = adam_scalars(acfg, count, lr)
+        scale = (clip_scale(grads, acfg.clip_norm)
+                 if acfg.clip_norm is not None else None)
+
+        fused_idx = {e.index for plan in fused_plans for e in plan.entries}
+        new_p, new_m, new_v = (list(p_leaves), list(m_leaves), list(v_leaves))
+        for i in range(len(p_leaves)):
+            if i in fused_idx:
+                continue
+            new_p[i], new_m[i], new_v[i] = adam_leaf_update(
+                g_leaves[i], m_leaves[i], v_leaves[i], p_leaves[i], acfg,
+                lr_t, b1c, b2c, mask=mk_leaves[i], scale=scale)
+
+        new_state: Dict[str, Any] = {}
+        stats: Dict[str, Any] = {}
+        for plan in fused_plans:
+            engine_count(f"{plan.key}/fused")
+            fam = get_family(plan.family)
+            theta0 = None if state is None else state.get(plan.key)
+            sums, maxes = [], []
+            # pass 1: one read of (grad, mu, nu, param) per leaf -> moments
+            # written, O(m) statistics out, the updated values never stored
+            for e in plan.entries:
+                i = e.index
+                new_m[i], new_v[i], cs, cm = fused_adam_colstats(
+                    g_leaves[i], m_leaves[i], v_leaves[i], p_leaves[i],
+                    cfg=acfg, lr_t=lr_t, b1c=b1c, b2c=b2c,
+                    scale=scale, mask=mk_leaves[i], transpose=e.transpose)
+                sums.append(cs.reshape(-1))
+                maxes.append(cm.reshape(-1))
+            colsum = jnp.concatenate(sums) if len(sums) > 1 else sums[0]
+            colmax = jnp.concatenate(maxes) if len(maxes) > 1 else maxes[0]
+            sids = jnp.asarray(plan.virtual_seg_ids())
+            C_seg = jnp.asarray(plan.radii())
+            w_col = (jnp.asarray(plan.virtual_col_weights())
+                     if fam.uses_weights else None)
+            aux = fam.seg_ops.from_colstats(colsum, colmax, w_col)
+            mu, theta, iters, inside_seg, zero_seg = _segmented_newton(
+                aux, sids, C_seg, plan.num_segments, theta0, 32,
+                ops=fam.seg_ops)
+            # fold the identity/zero segment gating into the clip level so
+            # pass 2 is a single min() — no virtual columns are padding, so
+            # the segment lookups need no sentinel extension
+            mu_eff = jnp.where(zero_seg[sids], 0.0,
+                               jnp.where(inside_seg[sids], _MU_INF, mu))
+            off = 0
+            # pass 2: recompute the update from the just-written moments,
+            # clip at mu, write the params — the step's only param write
+            for e in plan.entries:
+                span = e.lead * e.m
+                mu_leaf = mu_eff[off:off + span].reshape(e.lead, e.m)
+                off += span
+                i = e.index
+                new_p[i] = fused_adam_clip_apply(
+                    new_m[i], new_v[i], p_leaves[i], mu_leaf,
+                    cfg=acfg, lr_t=lr_t, b1c=b1c, b2c=b2c,
+                    mask=mk_leaves[i], transpose=e.transpose)
+            new_state[plan.key] = theta
+            stats[plan.key] = iters
+
+        # unfused remainder: every_k-gated plans and families without the
+        # streaming hook (packed Newton), then unpackable per-leaf norms
+        fused_keys = {plan.key for plan in fused_plans}
+        for plan in plans:
+            if plan.key in fused_keys:
+                continue
+            theta0 = None if state is None else state.get(plan.key)
+            projected, theta, iters = self._solve_plan(plan, new_p, theta0)
+            for e in plan.entries:
+                new_p[e.index] = _gated(projected[e.index], new_p[e.index],
+                                        count, plan.every_k)
+            if plan.every_k > 1:
+                do = (count % plan.every_k) == 0
+                prev = (theta0 if theta0 is not None
+                        else jnp.zeros_like(theta))
+                theta = jnp.where(do, theta, prev)
+            new_state[plan.key] = theta
+            stats[plan.key] = iters
+
+        for i, spec in per_leaf:
+            engine_count("per_leaf")
+            fn = _project_fn(spec)
+            projected = _apply_2d(fn, new_p[i], spec.radius, spec.axis)
+            new_p[i] = _gated(projected, new_p[i], count, spec.every_k)
+
+        if mask is not None:
+            # support freeze on the unfused leaves; the fused clip pass
+            # already multiplies its output by the mask in-kernel
+            for i in range(len(new_p)):
+                if i not in fused_idx:
+                    new_p[i] = new_p[i] * mk_leaves[i]
+
+        new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+        new_opt = AdamState(count=count,
+                            mu=jax.tree_util.tree_unflatten(treedef, new_m),
+                            nu=jax.tree_util.tree_unflatten(treedef, new_v))
+        if with_stats:
+            return new_params, new_opt, new_state, stats
+        return new_params, new_opt, new_state
 
 
 # ---------------------------------------------------------------------------

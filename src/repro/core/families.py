@@ -13,9 +13,14 @@ A family declares (DESIGN.md §8):
   * ``norms``        — the ``ProjectionSpec.norm`` strings it serves;
   * ``seg_ops``      — the per-column segmented-Newton statistics hooks
                        (the ``core.l1inf._PlainSegOps`` contract: prepare /
-                       stats / stats0 / colnorm / death / finalize). Because
-                       every hook is per-column given the shared theta, the
-                       SAME ops power the local, packed, and sharded solves;
+                       stats / stats0 / colnorm / death / finalize, plus the
+                       OPTIONAL ``from_colstats(colsum, colmax, w)`` — aux
+                       from streaming per-column sum/max statistics, which
+                       is what qualifies a family for the fused two-pass
+                       train step of ``kernels/fused_step``, DESIGN.md §11).
+                       Because every hook is per-column given the shared
+                       theta, the SAME ops power the local, packed, and
+                       sharded solves;
   * ``norm_fn``      — the constraint norm (feasibility test);
   * ``project_leaf`` — the per-matrix projection (per-leaf fallback path);
   * ``reference``    — an independent exact reference (tests/benches);

@@ -398,6 +398,17 @@ class _PlainSegOps:
                              (the C <= 0 norm-removal threshold)
       finalize(Ydt, A, mu)-> projected output before inside/zero gating
 
+    Optional hook (absent here — the plain family cannot provide it):
+
+      from_colstats(colsum, colmax, w) -> aux built from STREAMING
+                             per-column (sum |.|, max |.|) statistics
+                             alone. Families with this hook can run the
+                             fused two-HBM-pass train step
+                             (``kernels/fused_step``, DESIGN.md §11);
+                             the plain family's aux needs per-column
+                             sorted prefix sums, which no single
+                             streaming sweep can emit.
+
     All hooks are per-column given the shared theta, so the same ops run
     unchanged inside ``shard_map`` (rows resident, columns sharded).
     """
@@ -431,47 +442,33 @@ class _PlainSegOps:
         return jnp.sign(Ydt) * jnp.minimum(A, mu[None, :])
 
 
-def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
-                     num_segments: int,
-                     theta0: Optional[jnp.ndarray],
-                     max_iter: int,
-                     axis_names: Tuple[str, ...] = (),
-                     contrib: Optional[jnp.ndarray] = None,
-                     ops=None,
-                     w_col: Optional[jnp.ndarray] = None):
-    """Shared body of the segmented Newton solve (local and sharded forms).
+def _segmented_newton(aux, seg_ids: jnp.ndarray, C_seg,
+                      num_segments: int,
+                      theta0: Optional[jnp.ndarray],
+                      max_iter: int,
+                      *, ops,
+                      axis_names: Tuple[str, ...] = (),
+                      contrib: Optional[jnp.ndarray] = None,
+                      dt=jnp.float32):
+    """Segmented Newton on PREPARED per-column statistics (no buffer).
 
-    With ``axis_names`` empty this is the single-buffer solve. With
-    ``axis_names`` given, the function must run inside ``shard_map`` over
-    those mesh axes: ``Y``/``seg_ids``/``contrib`` are the rank's LOCAL
-    column block and every per-segment reduction is followed by a
-    ``psum``/``pmax`` over ``axis_names``, so the (num_segments,)-vector
-    Newton state is bit-identical on every rank and identical (up to fp
-    reduction order) to the gathered solve. Only O(num_segments) floats
-    cross the link per Eq.-(19) evaluation — never a column.
+    The iteration half of ``_segmented_solve``, factored out so callers
+    that build ``aux`` without materializing a packed buffer — the fused
+    optimizer+projection step (``kernels/fused_step``, DESIGN.md §11)
+    assembles it from streamed per-column (sum, max) statistics via the
+    family's ``from_colstats`` hook — run the exact same solve on the
+    O(num_segments) state. ``aux`` is the family's prepare/from_colstats
+    output for the M (virtual) columns mapped by ``seg_ids``; everything
+    else follows the ``_segmented_solve`` contract.
 
-    ``contrib`` (M,) bool marks the columns this rank OWNS for reduction
-    purposes: a column replicated across ranks (a leaf whose width the mesh
-    does not divide) must be summed exactly once, so only rank 0 sets its
-    contrib bit; the clip/identity output math still runs on every rank
-    (it is pure per-column given the shared theta).
-
-    ``ops`` selects the constraint family's per-column statistics (the
-    ``_PlainSegOps`` contract; default: plain l1,inf) and ``w_col`` (M,)
-    carries the per-column weights for weight-aware families.
+    Returns (mu (M,), theta_out (G,), iters, inside_seg (G,), zero_seg (G,))
+    — mu is the per-column water level at theta* BEFORE inside/zero gating
+    (callers apply the identity/zero overrides; ``_segmented_solve`` does it
+    via column lookups, the fused clip pass folds it into mu).
     """
-    if Y.ndim != 2:
-        raise ValueError("packed buffer must be 2-D")
-    if ops is None:
-        ops = _PlainSegOps
-    dt = jnp.promote_types(Y.dtype, jnp.float32)
-    A = jnp.abs(Y.astype(dt))
-    n, M = A.shape
     G = int(num_segments)
     seg_ids = jnp.asarray(seg_ids, jnp.int32)
     C_seg = jnp.asarray(C_seg, dt)
-    if w_col is not None:
-        w_col = jnp.asarray(w_col, dt)
     tiny = jnp.finfo(dt).tiny
 
     def allsum(v):
@@ -480,7 +477,6 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
     def allmax(v):
         return jax.lax.pmax(v, axis_names) if axis_names else v
 
-    aux = ops.prepare(A, w_col)
     valid = seg_ids < G
     own = valid if contrib is None else jnp.logical_and(valid, contrib)
     sum_seg = functools.partial(jax.ops.segment_sum, segment_ids=seg_ids,
@@ -546,22 +542,70 @@ def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
                       lambda: eval_step(theta)[1],
                       lambda: mu)
 
-    X = ops.finalize(Y.astype(dt), A, mu)
     inside_seg = norm_seg <= C_seg
     zero_seg = C_seg <= 0
-    ext_b = jnp.concatenate([inside_seg, jnp.array([True])])
-    inside_col = ext_b[jnp.minimum(seg_ids, G)]       # padding: identity
-    ext_z = jnp.concatenate([zero_seg, jnp.array([False])])
-    zero_col = ext_z[jnp.minimum(seg_ids, G)]
-    X = jnp.where(inside_col[None, :], Y.astype(dt), X)
-    X = jnp.where(zero_col[None, :], 0.0, X)
-
     # max is idempotent, so replicated columns need no ownership mask here
     seg_max = allmax(jax.ops.segment_max(
         jnp.where(valid, ops.death(aux), 0.0), seg_ids,
         num_segments=G + 1)[:G])
     theta_out = jnp.where(zero_seg, seg_max,
                           jnp.where(inside_seg, 0.0, theta))
+    return mu, theta_out, iters, inside_seg, zero_seg
+
+
+def _segmented_solve(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg,
+                     num_segments: int,
+                     theta0: Optional[jnp.ndarray],
+                     max_iter: int,
+                     axis_names: Tuple[str, ...] = (),
+                     contrib: Optional[jnp.ndarray] = None,
+                     ops=None,
+                     w_col: Optional[jnp.ndarray] = None):
+    """Shared body of the segmented Newton solve (local and sharded forms).
+
+    With ``axis_names`` empty this is the single-buffer solve. With
+    ``axis_names`` given, the function must run inside ``shard_map`` over
+    those mesh axes: ``Y``/``seg_ids``/``contrib`` are the rank's LOCAL
+    column block and every per-segment reduction is followed by a
+    ``psum``/``pmax`` over ``axis_names``, so the (num_segments,)-vector
+    Newton state is bit-identical on every rank and identical (up to fp
+    reduction order) to the gathered solve. Only O(num_segments) floats
+    cross the link per Eq.-(19) evaluation — never a column.
+
+    ``contrib`` (M,) bool marks the columns this rank OWNS for reduction
+    purposes: a column replicated across ranks (a leaf whose width the mesh
+    does not divide) must be summed exactly once, so only rank 0 sets its
+    contrib bit; the clip/identity output math still runs on every rank
+    (it is pure per-column given the shared theta).
+
+    ``ops`` selects the constraint family's per-column statistics (the
+    ``_PlainSegOps`` contract; default: plain l1,inf) and ``w_col`` (M,)
+    carries the per-column weights for weight-aware families.
+    """
+    if Y.ndim != 2:
+        raise ValueError("packed buffer must be 2-D")
+    if ops is None:
+        ops = _PlainSegOps
+    dt = jnp.promote_types(Y.dtype, jnp.float32)
+    A = jnp.abs(Y.astype(dt))
+    G = int(num_segments)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    C_seg = jnp.asarray(C_seg, dt)
+    if w_col is not None:
+        w_col = jnp.asarray(w_col, dt)
+
+    aux = ops.prepare(A, w_col)
+    mu, theta_out, iters, inside_seg, zero_seg = _segmented_newton(
+        aux, seg_ids, C_seg, G, theta0, max_iter, ops=ops,
+        axis_names=axis_names, contrib=contrib, dt=dt)
+
+    X = ops.finalize(Y.astype(dt), A, mu)
+    ext_b = jnp.concatenate([inside_seg, jnp.array([True])])
+    inside_col = ext_b[jnp.minimum(seg_ids, G)]       # padding: identity
+    ext_z = jnp.concatenate([zero_seg, jnp.array([False])])
+    zero_col = ext_z[jnp.minimum(seg_ids, G)]
+    X = jnp.where(inside_col[None, :], Y.astype(dt), X)
+    X = jnp.where(zero_col[None, :], 0.0, X)
     return X.astype(Y.dtype), theta_out, iters
 
 

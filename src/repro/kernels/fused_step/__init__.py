@@ -1,0 +1,1 @@
+from .ops import fused_adam_colstats, fused_adam_clip_apply

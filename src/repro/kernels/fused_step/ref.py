@@ -1,0 +1,97 @@
+"""jnp reference twins of the fused optimizer+projection passes.
+
+These are the EXACT math of ``kernel.py`` expressed as plain XLA ops — the
+dispatch layer (``ops.py``) runs them on non-TPU backends (where Pallas
+interpret mode would serialize the grid) and the tests diff the Pallas
+kernels against them tile-for-tile. Two invariants both implementations
+must keep (DESIGN.md §11):
+
+1. **Moment-consistent recompute.** Pass 1 stores the new moments in
+   ``cfg.moment_dtype`` and derives the updated value u from the STORED
+   (cast) moments; pass 2 recomputes u from those same stored moments.
+   The two passes therefore agree bit-for-bit on u — pass 1's statistics
+   describe exactly the matrix pass 2 clips. With fp32 moments the cast is
+   the identity and u also matches the unfused ``adam_update`` bit-for-bit;
+   with bf16 moments the fused step quantizes the moments BEFORE the step
+   (the unfused path steps on the pre-cast fp32 moments), a one-ulp-class
+   deviation documented in DESIGN.md §11.
+
+2. **Param-dtype rounding before statistics.** u is rounded through the
+   param dtype before |.| statistics and before the clip, matching the
+   unfused path where the packer reads the already-written (rounded)
+   params. Without this, bf16 params would see stats of values that never
+   exist in memory.
+
+The update formula itself mirrors ``optim.adam.adam_leaf_update`` — any
+change there must land here and in ``kernel.py`` in the same commit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _view3(x):
+    """Leaf -> (lead, R, C) canonical 3-D view (lead = stacked matrices)."""
+    return x.reshape((-1,) + x.shape[-2:]) if x.ndim > 2 else x[None]
+
+
+def _u_from_moments(m_st, v_st, p, cfg, lr_t, b1c, b2c, mask):
+    """Updated value u in the PARAM dtype from the stored moments."""
+    mhat = m_st.astype(jnp.float32) / b1c
+    vhat = v_st.astype(jnp.float32) / b2c
+    step = lr_t * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if cfg.weight_decay:
+        step = step + lr_t * cfg.weight_decay * p.astype(jnp.float32)
+    if mask is not None:
+        step = step * mask.astype(jnp.float32)
+    return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+
+def adam_colstats_ref(g, m, v, p, *, cfg, lr_t, b1c, b2c,
+                      scale=None, mask=None, transpose=False):
+    """Pass 1: Adam moments + per-column (sum, max) of |u| — u never stored.
+
+    Returns (m_new, v_new, colsum, colmax): moments in ``cfg.moment_dtype``
+    with the leaf's shape, stats f32 (lead, m) over the canonical columns
+    (the trailing dim, or the second-to-last when ``transpose``).
+    """
+    shape = p.shape
+    g3, m3, v3, p3 = _view3(g), _view3(m), _view3(v), _view3(p)
+    mk3 = None if mask is None else _view3(mask)
+    if scale is not None:
+        g3 = (g3 * scale).astype(g3.dtype)
+    if mk3 is not None:
+        g3 = g3 * mk3.astype(g3.dtype)
+    g32 = g3.astype(jnp.float32)
+    m_new = cfg.b1 * m3.astype(jnp.float32) + (1 - cfg.b1) * g32
+    v_new = cfg.b2 * v3.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+    m_st = m_new.astype(cfg.moment_dtype)
+    v_st = v_new.astype(cfg.moment_dtype)
+    u = _u_from_moments(m_st, v_st, p3, cfg, lr_t, b1c, b2c, mk3)
+    a = jnp.abs(u.astype(jnp.float32))
+    red = 2 if transpose else 1
+    colsum = jnp.sum(a, axis=red)
+    colmax = jnp.max(a, axis=red)
+    return m_st.reshape(shape), v_st.reshape(shape), colsum, colmax
+
+
+def adam_clip_apply_ref(m_st, v_st, p, mu, *, cfg, lr_t, b1c, b2c,
+                        mask=None, transpose=False):
+    """Pass 2: recompute u from the stored moments, clip at mu, write params.
+
+    ``mu``: (lead, m) f32 per-column clip level over the canonical columns
+    (1e30-class sentinel = identity, 0 = column zeroed — the engine folds
+    the inside/zero segment gating into mu). Returns the clipped params in
+    the leaf's shape/dtype.
+    """
+    shape = p.shape
+    m3, v3, p3 = _view3(m_st), _view3(v_st), _view3(p)
+    mk3 = None if mask is None else _view3(mask)
+    u = _u_from_moments(m3, v3, p3, cfg, lr_t, b1c, b2c, mk3)
+    uf = u.astype(jnp.float32)
+    mu_b = mu[:, :, None] if transpose else mu[:, None, :]
+    x = jnp.sign(uf) * jnp.minimum(jnp.abs(uf), mu_b)
+    if mk3 is not None:
+        x = x * mk3.astype(jnp.float32)
+    return x.astype(p.dtype).reshape(shape)

@@ -123,11 +123,12 @@ def projection_engine_for(cfg: ArchConfig, mesh: Optional[Mesh],
                           with_projection: bool = True) -> ProjectionEngine:
     """The production engine policy: mesh-resident sharded solve on a real
     mesh (weight shards stay put; per-segment stats psum per iteration),
-    single-buffer Newton on one device."""
+    the fused two-HBM-pass step on one device (plans the megakernel cannot
+    take fall back to single-buffer Newton inside the engine)."""
     specs = cfg.projection_specs if with_projection else ()
     if mesh is not None and mesh.size > 1:
         return ProjectionEngine(specs, solver="sharded", mesh=mesh)
-    return ProjectionEngine(specs)
+    return ProjectionEngine(specs, solver="fused")
 
 
 def build_train_step(model: Model, mesh: Optional[Mesh], rules: dict,

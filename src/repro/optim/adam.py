@@ -4,6 +4,19 @@ Features needed at scale: fp32 moments regardless of param dtype (or bf16
 moments for memory-tight configs), decoupled weight decay, global-norm
 clipping, bias correction, masked updates (the paper's Algorithm 3), and a
 post-update projection hook (projected gradient descent).
+
+The update math is factored into scalar helpers (``adam_scalars``,
+``clip_scale``) and a per-leaf kernel (``adam_leaf_update``) so the fused
+optimizer+projection megakernel (``kernels/fused_step``, DESIGN.md §11)
+computes the EXACT same update in-register — any change to the step
+formula here must be mirrored in ``kernels/fused_step/ref.py``.
+
+Mask semantics (Algorithm 3's support freeze): ``mask`` zeroes the WHOLE
+step for masked-out entries — gradients before the moment update AND the
+decoupled weight-decay term. (Decay is not a gradient; gating only the
+grads would let ``lr_t * weight_decay * p`` keep shrinking frozen params,
+silently violating the freeze.) A frozen entry is bit-identical across
+steps for any ``weight_decay``.
 """
 from __future__ import annotations
 
@@ -14,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["AdamConfig", "AdamState", "adam_init", "adam_update",
-           "global_norm", "clip_by_global_norm"]
+           "adam_scalars", "adam_leaf_update",
+           "global_norm", "clip_by_global_norm", "clip_scale"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,9 +56,18 @@ def global_norm(tree: Any) -> jnp.ndarray:
                         for l in leaves))
 
 
-def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+def clip_scale(tree: Any, max_norm: float) -> jnp.ndarray:
+    """The scalar multiplier of global-norm clipping: min(1, max_norm/||g||).
+
+    Split out of ``clip_by_global_norm`` so fused paths can compute the
+    scale once (one reduction over the grad tree) and fold the multiply
+    into their first pass over each leaf."""
     norm = global_norm(tree)
-    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Any:
+    scale = clip_scale(tree, max_norm)
     return jax.tree_util.tree_map(lambda g: (g * scale).astype(g.dtype), tree)
 
 
@@ -57,40 +80,74 @@ def adam_init(params: Any, cfg: AdamConfig = AdamConfig()) -> AdamState:
     )
 
 
+def adam_scalars(cfg: AdamConfig, count: jnp.ndarray, lr=None):
+    """(lr_t, b1c, b2c) at the POST-increment optimizer count.
+
+    ``lr`` overrides ``cfg.lr`` (schedules); b1c/b2c are the bias-correction
+    denominators 1 - b^t. These are the only traced scalars the per-leaf
+    update needs, which is what lets ``kernels/fused_step`` ship them to the
+    kernel as one tiny prefetched vector."""
+    lr_t = cfg.lr if lr is None else lr
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    return lr_t, b1c, b2c
+
+
+def adam_leaf_update(g, m, v, p, cfg: AdamConfig, lr_t, b1c, b2c,
+                     *, mask=None, scale=None):
+    """One leaf of the Adam update: (p_new, m_new, v_new).
+
+    fp32 math regardless of input dtypes; moments stored back in
+    ``cfg.moment_dtype``; ``scale`` is the optional global-norm clip
+    multiplier (applied exactly as ``clip_by_global_norm`` does:
+    ``(g * scale).astype(g.dtype)``); ``mask`` ({0,1}, broadcastable)
+    freezes masked-out entries — it zeroes the gradient before the moment
+    update AND the whole step (weight decay included), so a frozen entry
+    is bit-identical across steps.
+    """
+    if scale is not None:
+        g = (g * scale).astype(g.dtype)
+    if mask is not None:
+        g = g * mask.astype(g.dtype)
+    g32 = g.astype(jnp.float32)
+    m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+    v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+    mhat = m_new / b1c
+    vhat = v_new / b2c
+    step = lr_t * mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if cfg.weight_decay:
+        step = step + lr_t * cfg.weight_decay * p.astype(jnp.float32)
+    if mask is not None:
+        step = step * mask.astype(jnp.float32)
+    return ((p.astype(jnp.float32) - step).astype(p.dtype),
+            m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype))
+
+
 def adam_update(grads: Any, state: AdamState, params: Any,
                 cfg: AdamConfig = AdamConfig(),
                 lr: Optional[jnp.ndarray] = None,
                 mask: Any = None):
     """Returns (new_params, new_state). `lr` overrides cfg.lr (schedules).
-    `mask` (same treedef, {0,1}) freezes masked-out entries (Algorithm 3)."""
-    if cfg.clip_norm is not None:
-        grads = clip_by_global_norm(grads, cfg.clip_norm)
-    if mask is not None:
-        grads = jax.tree_util.tree_map(lambda g, m: g * m.astype(g.dtype),
-                                       grads, mask)
+    `mask` (same treedef, {0,1}) freezes masked-out entries (Algorithm 3):
+    the whole step — grads and decoupled weight decay — is zeroed under it.
+    """
     count = state.count + 1
-    lr_t = cfg.lr if lr is None else lr
-    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
-    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr_t, b1c, b2c = adam_scalars(cfg, count, lr)
+    scale = (clip_scale(grads, cfg.clip_norm)
+             if cfg.clip_norm is not None else None)
 
-    def upd(g, m, v, p):
-        g32 = g.astype(jnp.float32)
-        m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
-        v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
-        mhat = m_new / b1c
-        vhat = v_new / b2c
-        step = lr_t * mhat / (jnp.sqrt(vhat) + cfg.eps)
-        if cfg.weight_decay:
-            step = step + lr_t * cfg.weight_decay * p.astype(jnp.float32)
-        return ((p.astype(jnp.float32) - step).astype(p.dtype),
-                m_new.astype(cfg.moment_dtype), v_new.astype(cfg.moment_dtype))
+    def upd(p, g, m, v, mk=None):
+        return adam_leaf_update(g, m, v, p, cfg, lr_t, b1c, b2c,
+                                mask=mk, scale=scale)
 
-    flat_p, treedef = jax.tree_util.tree_flatten(params)
-    flat_g = treedef.flatten_up_to(grads)
-    flat_m = treedef.flatten_up_to(state.mu)
-    flat_v = treedef.flatten_up_to(state.nu)
-    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
-    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
-    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
-    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    # one pass over the tree: each leaf maps to its (p, m, v) triple, then
+    # a single tree_transpose splits the triples back into three trees
+    if mask is None:
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    else:
+        out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu,
+                                     mask)
+    treedef = jax.tree_util.tree_structure(params)
+    new_p, new_m, new_v = jax.tree_util.tree_transpose(
+        treedef, jax.tree_util.tree_structure((0, 0, 0)), out)
     return new_p, AdamState(count=count, mu=new_m, nu=new_v)

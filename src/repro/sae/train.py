@@ -52,8 +52,10 @@ class SAEResult:
 def _make_step(cfg: SAEConfig, tcfg: SAETrainConfig, acfg: AdamConfig):
     specs = (tcfg.projection,) if tcfg.projection else ()
     # the shared projected-update step core: Adam (grads masked), packed
-    # warm-started projection, then the mask freeze (Algorithm 3)
-    engine = ProjectionEngine(specs)
+    # warm-started projection, then the mask freeze (Algorithm 3); "fused"
+    # runs the two-HBM-pass megakernel where the constraint family streams
+    # its statistics and falls back to the identical Newton path elsewhere
+    engine = ProjectionEngine(specs, solver="fused")
 
     @jax.jit
     def step(params, opt_state, proj_state, x, y, mask):

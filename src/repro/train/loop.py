@@ -36,6 +36,9 @@ class TrainConfig:
     lr: float = 3e-4
     warmup: int = 20
     with_projection: bool = True
+    proj_solver: str = "fused"     # engine solver; "fused" = two-HBM-pass
+                                   # step where the family supports it,
+                                   # bit-equal Newton fallback elsewhere
     seed: int = 0
 
 
@@ -47,7 +50,8 @@ def build_accum_step(model: Model, acfg: AdamConfig, tcfg: TrainConfig,
     cfg = model.cfg
     if engine is None:
         engine = ProjectionEngine(
-            cfg.projection_specs if tcfg.with_projection else ())
+            cfg.projection_specs if tcfg.with_projection else (),
+            solver=tcfg.proj_solver)
 
     def loss_fn(params, batch):
         return model.loss(params, batch)
@@ -98,7 +102,8 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
     start_step = 0
 
     engine = ProjectionEngine(
-        model.cfg.projection_specs if tcfg.with_projection else ())
+        model.cfg.projection_specs if tcfg.with_projection else (),
+        solver=tcfg.proj_solver)
     proj_state = engine.init_state(params)
 
     ckpt = None

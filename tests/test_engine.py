@@ -229,6 +229,74 @@ def test_train_loop_restores_pre_engine_checkpoint(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# optimizer regressions (optim/adam.py)
+# ---------------------------------------------------------------------------
+
+def test_adam_frozen_params_immobile_under_weight_decay():
+    """Regression: decoupled weight decay must not move masked-out params —
+    the mask zeroes the WHOLE step, not just the gradient. A frozen entry
+    stays bit-identical across steps even with weight_decay > 0."""
+    params = _params(8)
+    mask = jax.tree_util.tree_map(jnp.ones_like, params)
+    mask["enc1"]["w"] = mask["enc1"]["w"].at[:, :17].set(0.0)
+    grads = jax.tree_util.tree_map(lambda p: 0.1 * jnp.ones_like(p), params)
+    acfg = AdamConfig(lr=1e-2, weight_decay=0.1)
+    opt = adam_init(params, acfg)
+    frozen0 = np.asarray(params["enc1"]["w"][:, :17]).copy()
+    p = params
+    for _ in range(5):
+        p, opt = adam_update(grads, opt, p, acfg, mask=mask)
+    np.testing.assert_array_equal(np.asarray(p["enc1"]["w"][:, :17]),
+                                  frozen0)
+    # the unmasked region did move
+    assert np.abs(np.asarray(p["enc1"]["w"][:, 17:])
+                  - np.asarray(params["enc1"]["w"][:, 17:])).max() > 0
+
+
+def test_adam_update_matches_naive_reference():
+    """The single-tree_map restructure of ``adam_update`` changes no math:
+    it must match an inline per-leaf transcription of the update bit-for-bit
+    (fp32 moments, clip, schedule override, mask)."""
+    from repro.optim.adam import clip_scale
+
+    params = _params(9)
+    rng = np.random.default_rng(11)
+    grads = jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape), jnp.float32), params)
+    mask = jax.tree_util.tree_map(jnp.ones_like, params)
+    mask["blocks"]["mlp_w1"] = mask["blocks"]["mlp_w1"].at[1].set(0.0)
+    acfg = AdamConfig(lr=1e-2, weight_decay=0.03, clip_norm=0.5)
+    opt = adam_init(params, acfg)
+    lr = 7e-3
+
+    new_p, new_opt = adam_update(grads, opt, params, acfg, lr=lr, mask=mask)
+
+    count = opt.count + 1
+    b1c = 1.0 - acfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - acfg.b2 ** count.astype(jnp.float32)
+    scale = clip_scale(grads, acfg.clip_norm)
+    flat_p = jax.tree_util.tree_leaves(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt.mu)
+    flat_v = jax.tree_util.tree_leaves(opt.nu)
+    flat_mk = jax.tree_util.tree_leaves(mask)
+    for p0, g, m, v, mk, p1, m1, v1 in zip(
+            flat_p, flat_g, flat_m, flat_v, flat_mk,
+            jax.tree_util.tree_leaves(new_p),
+            jax.tree_util.tree_leaves(new_opt.mu),
+            jax.tree_util.tree_leaves(new_opt.nu)):
+        g = (g * scale).astype(g.dtype) * mk
+        m_ref = acfg.b1 * m + (1 - acfg.b1) * g
+        v_ref = acfg.b2 * v + (1 - acfg.b2) * g * g
+        step = lr * (m_ref / b1c) / (jnp.sqrt(v_ref / b2c) + acfg.eps)
+        step = (step + lr * acfg.weight_decay * p0) * mk
+        np.testing.assert_array_equal(np.asarray(p0 - step), np.asarray(p1))
+        np.testing.assert_array_equal(np.asarray(m_ref), np.asarray(m1))
+        np.testing.assert_array_equal(np.asarray(v_ref), np.asarray(v1))
+    assert int(new_opt.count) == 1
+
+
+# ---------------------------------------------------------------------------
 # column_masks / sparsity_report axis arithmetic (previously untested)
 # ---------------------------------------------------------------------------
 
