@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from benchmarks.run import bench_meta
 from repro.core import ProjectionEngine, ProjectionSpec, init_projection_state
 
 
@@ -89,8 +90,8 @@ def main() -> None:
     theta_diff = float(jnp.max(jnp.abs(state1[k0] - state1_s[k0])))
 
     payload = {
-        "meta": {"quick": bool(args.quick), "devices": n_dev,
-                 "matrices": k_mats, "shape": [n, m]},
+        "meta": bench_meta(mesh, quick=bool(args.quick),
+                           matrices=k_mats, shape=[n, m]),
         "replicated_us": rep_us,
         "sharded_us": shd_us,
         "ratio_sharded_vs_replicated": shd_us / rep_us,

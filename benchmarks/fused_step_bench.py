@@ -34,6 +34,8 @@ from repro.core.engine import ProjectionEngine
 from repro.optim.adam import AdamConfig, adam_init
 from repro.roofline.analysis import HBM_BW
 
+from .run import bench_meta
+
 Row = Tuple[str, float, str]
 
 # per-step leaf-buffer visits over the constrained leaves (DESIGN.md §11):
@@ -155,8 +157,8 @@ def fused_step_report(quick: bool = True,
                      f"C_frac={C_frac};ratio={reg['ratio']:.3f}"))
 
     payload = {
-        "meta": {"quick": quick, "shape": [n, m], "lead": lead,
-                 "axes": [0, 1], "backend": jax.default_backend()},
+        "meta": bench_meta(quick=quick, shape=[n, m], lead=lead,
+                           axes=[0, 1]),
         "regimes": regimes,
         "worst_ratio": max(r["ratio"] for r in regimes),
         "worst_bytes_ratio": max((r["bytes_ratio"] for r in regimes

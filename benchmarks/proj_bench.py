@@ -25,6 +25,8 @@ from repro.core.engine import (apply_constraints_packed,
                                init_projection_state)
 from repro.kernels.l1inf import project_l1inf_pallas
 
+from .run import bench_meta
+
 Row = Tuple[str, float, str]
 
 
@@ -134,7 +136,7 @@ def engine_report(quick: bool = True,
     rng = np.random.default_rng(7)
     reps = 20 if quick else 50
     n, m = (128, 256) if quick else (512, 1024)
-    payload: dict = {"meta": {"quick": quick, "shape": [n, m]}}
+    payload: dict = {"meta": bench_meta(quick=quick, shape=[n, m])}
     rows: List[Row] = []
 
     def _hetero(rows_, cols_):
@@ -296,7 +298,7 @@ def families_report(quick: bool = True,
     rng = np.random.default_rng(17)
     reps = 30 if quick else 80
     n, m = (256, 512) if quick else (1024, 2048)
-    payload: dict = {"meta": {"quick": quick, "shape": [n, m]}}
+    payload: dict = {"meta": bench_meta(quick=quick, shape=[n, m])}
     rows: List[Row] = []
 
     scale = np.exp(rng.normal(size=(1, m)))
@@ -400,11 +402,51 @@ def dist_engine_report(quick: bool = True,
         d = json.load(f)
     rows: List[Row] = [
         ("dist/replicated", d["replicated_us"],
-         f"devices={d['meta']['devices']};"
+         f"devices={d['meta']['device_count']};"
          f"allgather={d['collectives']['replicated']['all-gather']}"),
         ("dist/sharded", d["sharded_us"],
          f"ratio={d['ratio_sharded_vs_replicated']:.2f};"
          f"allgather={d['collectives']['sharded']['all-gather']};"
+         f"max_diff={d['max_abs_diff']:.2e}"),
+    ]
+    return rows
+
+
+def dist_fused_report(quick: bool = True,
+                      out_path: str = "BENCH_dist_fused.json") -> List[Row]:
+    """Fused-sharded vs unfused-sharded projected step on an 8-way
+    host-device mesh (DESIGN.md §12).
+
+    Runs ``benchmarks.dist_fused_bench`` in a subprocess (the device count
+    must be set before jax initializes; the parent stays 1-device), loads
+    the JSON it writes, and reports the headline rows. CI uploads
+    ``out_path`` and ``scripts/check.sh --bench-smoke`` gates on it
+    (fused_sharded <= 0.85x unfused wall time, params <= 1e-5).
+    """
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        " --xla_force_host_platform_device_count=8").strip()
+    cmd = [sys.executable, "-m", "benchmarks.dist_fused_bench",
+           "--out", out_path] + (["--quick"] if quick else [])
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                          timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"dist_fused_bench failed (exit {proc.returncode}):\n"
+            f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    with open(out_path) as f:
+        d = json.load(f)
+    rows: List[Row] = [
+        ("dist/unfused_sharded", d["sharded_us"],
+         f"devices={d['meta']['device_count']};"
+         f"alltoall={d['collectives']['sharded']['all-to-all']}"),
+        ("dist/fused_sharded", d["fused_sharded_us"],
+         f"ratio={d['ratio_fused_vs_sharded']:.2f};"
+         f"allgather={d['collectives']['fused_sharded']['all-gather']};"
          f"max_diff={d['max_abs_diff']:.2e}"),
     ]
     return rows

@@ -18,6 +18,28 @@ import time
 import traceback
 
 
+def bench_meta(mesh=None, **extra) -> dict:
+    """The shared environment block every ``BENCH_*.json`` emitter stamps
+    into its ``meta``: backend, device count/kind, and (when the bench ran
+    on one) the mesh topology — so an artifact pulled off CI says what
+    hardware produced its numbers without consulting the build log.
+    Bench-specific keys (quick flags, shapes) ride along via ``extra``.
+    """
+    import jax
+
+    meta = {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+        "mesh_shape": (list(mesh.devices.shape)
+                       if mesh is not None else None),
+        "mesh_axes": (list(mesh.axis_names)
+                      if mesh is not None else None),
+    }
+    meta.update(extra)
+    return meta
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -39,6 +61,8 @@ def main() -> None:
             ("proj_engine", lambda: proj_bench.engine_report(quick=True)),
             ("proj_families", lambda: proj_bench.families_report(quick=True)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=True)),
+            ("dist_fused",
+             lambda: proj_bench.dist_fused_report(quick=True)),
             ("fused_step",
              lambda: fused_step_bench.fused_step_report(quick=True)),
             ("serve", lambda: serve_bench.serve_report(quick=True)),
@@ -55,6 +79,8 @@ def main() -> None:
             ("proj_families",
              lambda: proj_bench.families_report(quick=False)),
             ("proj_dist", lambda: proj_bench.dist_engine_report(quick=False)),
+            ("dist_fused",
+             lambda: proj_bench.dist_fused_report(quick=False)),
             ("fused_step",
              lambda: fused_step_bench.fused_step_report(quick=False)),
             ("serve", lambda: serve_bench.serve_report(quick=False)),

@@ -33,6 +33,8 @@ from repro.core import ProjectionSpec, apply_constraints
 from repro.sae import sae_init, sae_apply, SAEConfig, compact_sae
 from repro.sae.serve import make_serve_step
 
+from .run import bench_meta
+
 Row = Tuple[str, float, str]
 
 
@@ -121,6 +123,7 @@ def serve_report(quick: bool = True, out: str = "BENCH_serve.json"
     total_compact = 2.0 * B * (J * h + 2 * h * k + h * J)
 
     report = {
+        "meta": bench_meta(quick=quick),
         "regime": {"d": d, "n_hidden": h, "n_classes": k, "batch": B,
                    "radius": spec.radius, "column_sparsity_pct": colsp},
         "compaction": {"n_selected": J, "ratio": compact.compaction_ratio},

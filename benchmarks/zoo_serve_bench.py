@@ -37,6 +37,8 @@ from repro.models.zoo import build, make_batch
 from repro.models.transformer import forward, init_cache, decode_step
 from repro.serve import compact_model, refresh_model, recompact_model
 
+from .run import bench_meta
+
 Row = Tuple[str, float, str]
 
 _W1 = "blocks/.*/mlp/w1$"
@@ -146,6 +148,7 @@ def zoo_serve_report(quick: bool = True, out: str = "BENCH_zoo_serve.json"
     extra_traces = traces[0] - traces_baseline
 
     report = {
+        "meta": bench_meta(quick=quick),
         "regime": {"arch": cfg.name, "d_model": cfg.d_model, "d_ff": d_ff,
                    "n_layers": cfg.n_layers, "batch": B,
                    "column_sparsity_pct": colsp,

@@ -8,7 +8,8 @@
 #                                  # BENCH_proj.json + BENCH_families.json +
 #                                  # BENCH_dist_proj.json + BENCH_fused_step
 #                                  # .json + BENCH_serve.json
-#                                  # + BENCH_zoo_serve.json (CI uploads all
+#                                  # + BENCH_zoo_serve.json
+#                                  # + BENCH_dist_fused.json (CI uploads all
 #                                  # as artifacts), fails if the packed-batch
 #                                  # path is >1.15x slower than per-matrix,
 #                                  # the sharded engine is >1.15x the
@@ -20,11 +21,14 @@
 #                                  # column-sparsity regime, the zoo
 #                                  # compact decode is <2x dense tokens/sec,
 #                                  # not exact to 1e-4, or retraces across
-#                                  # hot refresh / live re-compaction, or the
+#                                  # hot refresh / live re-compaction, the
 #                                  # fused two-pass projected step is >0.8x
 #                                  # the unfused one (wall time), touches
 #                                  # more XLA-costed bytes, or diverges from
-#                                  # the unfused params
+#                                  # the unfused params, or the fused_sharded
+#                                  # step is >0.85x the unfused sharded one
+#                                  # on the 8-way host mesh, gathers a weight
+#                                  # shard, or diverges >1e-5 from it
 #
 # The docs check (scripts/check_docs.py) enforces the public-API docstring
 # contract (every exported symbol of the audited modules carries a
@@ -42,8 +46,10 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
     # exits 0); removing the artifacts first guarantees the gate below
     # reads THIS run's numbers or fails loudly — never stale files
     rm -f BENCH_proj.json BENCH_families.json BENCH_dist_proj.json \
-          BENCH_fused_step.json BENCH_serve.json BENCH_zoo_serve.json
+          BENCH_fused_step.json BENCH_serve.json BENCH_zoo_serve.json \
+          BENCH_dist_fused.json
     python -m benchmarks.run --quick --only proj_
+    python -m benchmarks.run --quick --only dist_fused
     python -m benchmarks.run --quick --only fused_step
     python -m benchmarks.run --quick --only serve
     python -m benchmarks.run --quick --only zoo_serve
@@ -130,6 +136,28 @@ assert fs_bytes is not None and fs_bytes < 1.0, (
 assert fs_diff <= 1e-5, f"fused != unfused params (max abs diff {fs_diff:.3e})"
 print(f"fused step bench smoke OK: fused/unfused {fs_ratio:.2f}x wall, "
       f"{fs_bytes:.2f}x bytes, max diff {fs_diff:.2e}")
+
+dfd = json.load(open("BENCH_dist_fused.json"))
+df_ratio = dfd["ratio_fused_vs_sharded"]
+df_diff = dfd["max_abs_diff"]
+df_ag = dfd["collectives"]["fused_sharded"]["all-gather"]
+# the PR-8 tentpole claim: the fused two-pass step run rank-local inside
+# shard_map (no packed buffer, one stacked (2,G) f32 psum per Newton
+# evaluation) beats the unfused sharded step (adam -> pack -> shard_map
+# Newton -> unpack) on the same column-sharded inputs. Measured ~0.42-0.44x
+# on the 8-way quick host mesh, so the 0.85 gate keeps ~2x headroom against
+# timing noise. Exactness is gated tight: both solvers run the same Newton
+# on the same per-column statistics (measured diff 0.0 — bit-identical fp
+# order per rank), and no path may gather a weight shard.
+assert df_ratio <= 0.85, (
+    f"fused_sharded is {df_ratio:.3f}x the unfused sharded step "
+    f"(>0.85x gate)")
+assert df_diff <= 1e-5, (
+    f"fused_sharded != sharded params (max abs diff {df_diff:.3e})")
+assert df_ag == 0, (
+    f"fused_sharded HLO contains {df_ag} all-gather(s)")
+print(f"dist fused bench smoke OK: fused_sharded/sharded {df_ratio:.2f}x "
+      f"wall, 0 all-gathers, max diff {df_diff:.2e}")
 
 zd = json.load(open("BENCH_zoo_serve.json"))
 zcolsp = zd["regime"]["column_sparsity_pct"]

@@ -39,7 +39,7 @@ from .l1inf import _segmented_newton
 __all__ = ["ProjectionEngine", "apply_constraints_packed",
            "init_projection_state"]
 
-_SOLVERS = ("newton", "pallas", "sharded", "fused")
+_SOLVERS = ("newton", "pallas", "sharded", "fused", "fused_sharded")
 
 # Identity sentinel for the fused clip pass: a per-column clip level far
 # above any parameter magnitude, so sign(u) * min(|u|, _MU_INF) == u exactly
@@ -53,14 +53,20 @@ class ProjectionEngine:
     Construct once per step-build (the specs and solver are static); call
     ``apply``/``projected_update`` inside the traced step. ``solver`` is the
     default for every packed plan ("newton" | "pallas" | "sharded" |
-    "fused"); ``mesh`` is required for "sharded". "fused" runs the
-    two-HBM-pass optimizer+projection megakernel inside
-    ``projected_update`` for every plan whose family provides the
-    ``from_colstats`` streaming hook at ``every_k == 1`` (DESIGN.md §11)
-    and is bit-identical to "newton" everywhere else (``apply`` and all
-    fallback plans solve exactly as "newton" would). The engine itself is
-    stateless — the theta warm-start dict returned by ``init_state``
-    threads through the caller's train state.
+    "fused" | "fused_sharded"); ``mesh`` is required for "sharded" and
+    "fused_sharded". "fused" runs the two-HBM-pass optimizer+projection
+    megakernel inside ``projected_update`` for every plan whose family
+    provides the ``from_colstats`` streaming hook at ``every_k == 1``
+    (DESIGN.md §11) and is bit-identical to "newton" everywhere else
+    (``apply`` and all fallback plans solve exactly as "newton" would).
+    "fused_sharded" is the mesh twin (DESIGN.md §12): the same two passes
+    run rank-local inside shard_map on each rank's column shard
+    (``dist.projection.fused_plan_sharded``) with one stacked
+    (2, num_segments) psum per Newton evaluation, and every plan the
+    megakernel cannot take falls back to the "sharded" shard_map Newton —
+    bit-identical to what ``solver="sharded"`` would produce. The engine
+    itself is stateless — the theta warm-start dict returned by
+    ``init_state`` threads through the caller's train state.
 
     >>> engine = ProjectionEngine((spec,)); state = engine.init_state(params)
     """
@@ -69,8 +75,8 @@ class ProjectionEngine:
                  *, solver: str = "newton", mesh=None):
         if solver not in _SOLVERS:
             raise ValueError(f"unknown solver {solver!r} (one of {_SOLVERS})")
-        if solver == "sharded" and mesh is None:
-            raise ValueError("solver='sharded' needs a mesh")
+        if solver in ("sharded", "fused_sharded") and mesh is None:
+            raise ValueError(f"solver={solver!r} needs a mesh")
         self.specs = tuple(specs or ())
         self.solver = solver
         self.mesh = mesh
@@ -97,11 +103,14 @@ class ProjectionEngine:
         (``core.families``); a family without a fused-kernel implementation
         falls back to the packed Newton path under solver='pallas', and
         plans the fused step cannot take (``projected_update`` dispatches
-        those here) solve exactly as solver='newton'."""
-        eff = "newton" if self.solver == "fused" else self.solver
+        those here) solve exactly as solver='newton' — or, under
+        solver='fused_sharded', exactly as solver='sharded' (the shard_map
+        Newton, shards resident)."""
+        eff = {"fused": "newton",
+               "fused_sharded": "sharded"}.get(self.solver, self.solver)
         engine_count(f"{plan.key}/{eff}")
         fam = get_family(plan.family)
-        if self.solver == "sharded":
+        if eff == "sharded":
             from ..dist.projection import project_plan_sharded
             vals = [leaves[e.index] for e in plan.entries]
             outs, theta, iters = project_plan_sharded(
@@ -189,7 +198,8 @@ class ProjectionEngine:
     def projected_update(self, grads: Any, opt_state, params: Any, acfg,
                          *, lr=None, mask: Any = None,
                          state: Optional[Dict[str, Any]] = None,
-                         with_stats: bool = False):
+                         with_stats: bool = False,
+                         grad_reduce: Optional[Any] = None):
         """Optimizer update + projection + gating: the step core shared by
         train/loop.py, sae/train.py, and launch/steps.py.
 
@@ -209,10 +219,25 @@ class ProjectionEngine:
         unclipped parameters never reach HBM and no packed buffer exists.
         Everything else (per-leaf specs, ``every_k``-gated plans, families
         without the hook) falls back to this unfused path, leaf-exact.
+        ``solver="fused_sharded"`` runs the same two passes rank-local
+        inside shard_map (``dist.projection.fused_plan_sharded``); its
+        fallback plans take the shard_map Newton instead, so no path
+        gathers a weight shard.
+
+        ``grad_reduce``: optional callable applied to ``grads`` FIRST —
+        the hook for explicit-collective data-parallel callers whose grads
+        are still per-rank partials (e.g. ``dist.compression
+        .compressed_psum`` inside a shard_map'd DP step; see
+        examples/compressed_dp.py). The reduction composes with the
+        projection in one jitted step and leaves the projection's
+        one-psum-per-eval contract untouched. Under GSPMD ``jax.grad``
+        grads arrive already reduced — leave it None there.
 
         Returns (params, opt_state, proj_state) (+ stats when requested).
         """
-        if self.solver == "fused" and self.specs:
+        if grad_reduce is not None:
+            grads = grad_reduce(grads)
+        if self.solver in ("fused", "fused_sharded") and self.specs:
             plans, per_leaf = self.plans(params)
             fused_plans = [
                 p for p in plans
@@ -274,9 +299,26 @@ class ProjectionEngine:
         new_state: Dict[str, Any] = {}
         stats: Dict[str, Any] = {}
         for plan in fused_plans:
-            engine_count(f"{plan.key}/fused")
+            engine_count(f"{plan.key}/{self.solver}")
             fam = get_family(plan.family)
             theta0 = None if state is None else state.get(plan.key)
+            if self.solver == "fused_sharded":
+                # mesh path: both passes + the one-psum-per-eval Newton run
+                # inside shard_map with the column shards resident
+                from ..dist.projection import fused_plan_sharded
+                idx = [e.index for e in plan.entries]
+                ps, ms, vs, theta, iters = fused_plan_sharded(
+                    plan, self.mesh,
+                    [g_leaves[i] for i in idx], [m_leaves[i] for i in idx],
+                    [v_leaves[i] for i in idx], [p_leaves[i] for i in idx],
+                    [mk_leaves[i] for i in idx],
+                    acfg=acfg, lr_t=lr_t, b1c=b1c, b2c=b2c, scale=scale,
+                    theta0=theta0)
+                for i, p_i, m_i, v_i in zip(idx, ps, ms, vs):
+                    new_p[i], new_m[i], new_v[i] = p_i, m_i, v_i
+                new_state[plan.key] = theta
+                stats[plan.key] = iters
+                continue
             sums, maxes = [], []
             # pass 1: one read of (grad, mu, nu, param) per leaf -> moments
             # written, O(m) statistics out, the updated values never stored

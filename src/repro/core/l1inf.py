@@ -508,9 +508,16 @@ def _segmented_newton(aux, seg_ids: jnp.ndarray, C_seg,
         a, b_, active, mu = ops.stats(aux, th_col)
         active = jnp.logical_and(active, valid)
         counted = jnp.logical_and(active, own)
-        Aa = allsum(sum_seg(jnp.where(counted, a, 0.0))[:G])
-        Ba = allsum(sum_seg(jnp.where(counted, b_, 0.0))[:G])
-        new = (Aa - Csafe) / jnp.maximum(Ba, tiny)
+        # ONE stacked psum per Eq.-(19) evaluation: the numerator and
+        # denominator segment sums cross the link together as a single
+        # (2, num_segments) all-reduce — the contract the sharded and
+        # fused-sharded engines assert on in HLO (one all-reduce in the
+        # Newton while-loop body, 2 * num_segments f32 on the wire).
+        AB = allsum(jnp.stack([
+            sum_seg(jnp.where(counted, a, 0.0))[:G],
+            sum_seg(jnp.where(counted, b_, 0.0))[:G],
+        ]))
+        new = (AB[0] - Csafe) / jnp.maximum(AB[1], tiny)
         mu = jnp.where(active, mu, 0.0)
         return new, mu
 
@@ -644,9 +651,10 @@ def project_l1inf_segmented_sharded(Y: jnp.ndarray, seg_ids: jnp.ndarray,
 
     ``Y``/``seg_ids``/``contrib`` are this rank's LOCAL column block of the
     packed buffer (columns sharded over ``axis_names``, rows resident).
-    Per-segment statistics are reduced locally then combined with one
-    ``psum`` of a (num_segments,) vector per Eq.-(19) evaluation (plus one
-    ``pmax`` for the C<=0 threshold), so theta is identical on every rank
+    Per-segment statistics are reduced locally then combined with ONE
+    ``psum`` of the stacked (2, num_segments) Eq.-(19) numerator/denominator
+    per evaluation (plus one ``pmax`` for the C<=0 threshold), so theta is
+    identical on every rank
     and equal to the gathered solve up to fp reduction order; weight shards
     never leave their device. See ``repro.dist.projection`` for the packing
     orchestration and DESIGN.md §7 for the math and byte counts.

@@ -7,11 +7,17 @@ warm-up steps have completed — the first steps include compilation) fires
 folded into the EWMA so one slow host cannot drag the baseline up and mask
 the next one, and warm-up samples fold clamped to threshold x EWMA for the
 same reason.
+
+``metrics()`` exposes the detector state as a flat per-step metrics dict
+(step time, EWMA, straggler flag/total) — the train loop
+(``train/loop.py``) records it every step and the launcher
+(``launch/train.py``) prints the straggler summary, so a slow host shows
+up in the run's metric stream, not just on stderr.
 """
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 __all__ = ["StepWatchdog"]
 
@@ -40,6 +46,9 @@ class StepWatchdog:
         self.ewma: Optional[float] = None
         self._n = 0
         self._t0: Optional[float] = None
+        self._last_step: Optional[int] = None
+        self._last_dt: Optional[float] = None
+        self._last_straggler = False
 
     def start(self) -> None:
         self._t0 = self.clock()
@@ -50,8 +59,12 @@ class StepWatchdog:
             raise RuntimeError("StepWatchdog.stop() without start()")
         dt = self.clock() - self._t0
         self._t0 = None
+        self._last_step = int(step)
+        self._last_dt = float(dt)
+        self._last_straggler = False
         armed = self.ewma is not None and self._n >= self.grace_steps
         if armed and dt > self.threshold * self.ewma:
+            self._last_straggler = True
             self.events.append((int(step), float(dt), float(self.ewma)))
             if self.on_straggler is not None:
                 self.on_straggler(step, dt, self.ewma)
@@ -64,3 +77,23 @@ class StepWatchdog:
             self.ewma = (1.0 - self.alpha) * self.ewma + self.alpha * dt_c
         self._n += 1
         return dt
+
+    def metrics(self) -> Dict[str, float]:
+        """Detector state as a flat per-step metrics dict.
+
+        Call after :meth:`stop`; the snapshot describes the step just
+        stopped. Keys: ``step`` (int), ``step_time_s``,
+        ``step_time_ewma_s`` (0.0 until the first sample folds),
+        ``straggler`` (1.0 iff the step just stopped fired the detector
+        — straggler steps do NOT fold into the EWMA, so the baseline the
+        flag was judged against is the one reported), and
+        ``straggler_events_total`` (cumulative count, == len(events)).
+        """
+        return {
+            "step": float(-1 if self._last_step is None
+                          else self._last_step),
+            "step_time_s": float(self._last_dt or 0.0),
+            "step_time_ewma_s": float(self.ewma or 0.0),
+            "straggler": 1.0 if self._last_straggler else 0.0,
+            "straggler_events_total": float(len(self.events)),
+        }

@@ -121,13 +121,17 @@ def opt_shardings(param_sh, mesh: Mesh):
 
 def projection_engine_for(cfg: ArchConfig, mesh: Optional[Mesh],
                           with_projection: bool = True) -> ProjectionEngine:
-    """The production engine policy: mesh-resident sharded solve on a real
-    mesh (weight shards stay put; per-segment stats psum per iteration),
-    the fused two-HBM-pass step on one device (plans the megakernel cannot
-    take fall back to single-buffer Newton inside the engine)."""
+    """The production engine policy: the fused two-HBM-pass step everywhere
+    it exists. On a >1-device mesh that is ``solver="fused_sharded"`` — the
+    PR-7 megakernel runs rank-local inside shard_map (weight shards stay
+    put, one stacked (2, num_segments) psum per Newton evaluation,
+    DESIGN.md §12) and plans the megakernel cannot take fall back to the
+    shard_map Newton of ``solver="sharded"``, bit-identically. On one
+    device it is ``solver="fused"`` with the single-buffer Newton as the
+    per-plan fallback."""
     specs = cfg.projection_specs if with_projection else ()
     if mesh is not None and mesh.size > 1:
-        return ProjectionEngine(specs, solver="sharded", mesh=mesh)
+        return ProjectionEngine(specs, solver="fused_sharded", mesh=mesh)
     return ProjectionEngine(specs, solver="fused")
 
 

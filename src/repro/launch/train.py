@@ -50,6 +50,12 @@ def main():
     out = train(model, batcher, tcfg, resume=(args.resume == "auto"))
     print(f"[launch] final loss {out['losses'][-1]:.4f}; "
           f"first loss {out['losses'][0]:.4f}")
+    wd = out["watchdog"]
+    print(f"[launch] step time EWMA {wd['step_time_ewma_s']*1e3:.0f} ms; "
+          f"{int(wd['straggler_events_total'])} straggler step(s)")
+    for s, dt, ew in out["straggler_events"][:5]:
+        print(f"[launch]   straggler step {s}: {dt:.3f}s "
+              f"(EWMA was {ew:.3f}s)")
     if out["sparsity"]:
         for k, v in out["sparsity"].items():
             print(f"[sparsity] {k}: {v:.1f}% columns zero")

@@ -131,6 +131,7 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
         f"[watchdog] straggler step {s}: {dt:.3f}s vs EWMA {ew:.3f}s"))
 
     losses = []
+    step_metrics = []   # per-step watchdog snapshots (dist/watchdog.py)
     for step in range(start_step, tcfg.steps):
         batch = jax.tree_util.tree_map(jnp.asarray, batcher.get(step))
         watchdog.start()
@@ -138,6 +139,7 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
             params, opt_state, proj_state, batch, lr_at(tcfg, step))
         loss_f = float(loss)
         dt = watchdog.stop(step)
+        step_metrics.append(watchdog.metrics())
         losses.append(loss_f)
         if on_step:
             on_step(step, loss_f, dt)
@@ -157,4 +159,6 @@ def train(model: Model, batcher: LMBatcher, tcfg: TrainConfig,
         report = sparsity_report(params, model.cfg.projection_specs)
     return {"params": params, "opt_state": opt_state, "losses": losses,
             "proj_state": proj_state, "sparsity": report,
-            "straggler_events": watchdog.events}
+            "straggler_events": watchdog.events,
+            "step_metrics": step_metrics,
+            "watchdog": watchdog.metrics()}

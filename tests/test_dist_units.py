@@ -170,6 +170,37 @@ def test_watchdog_stop_returns_duration_and_requires_start():
         w.stop(1)
 
 
+def test_watchdog_metrics_snapshot():
+    clock = _FakeClock()
+    w = StepWatchdog(threshold=2.0, grace_steps=0, alpha=0.5, clock=clock)
+    # before any step: sentinel step, zeros everywhere
+    m = w.metrics()
+    assert m["step"] == -1.0 and m["step_time_s"] == 0.0
+    assert m["step_time_ewma_s"] == 0.0 and m["straggler"] == 0.0
+    assert m["straggler_events_total"] == 0.0
+
+    _run_steps(w, clock, [1.0, 1.0])
+    m = w.metrics()
+    assert m["step"] == 1.0
+    assert m["step_time_s"] == pytest.approx(1.0)
+    assert m["step_time_ewma_s"] == pytest.approx(1.0)
+    assert m["straggler"] == 0.0 and m["straggler_events_total"] == 0.0
+
+    # a straggler step flags itself but leaves the EWMA baseline alone
+    w.start(); clock.t += 100.0; w.stop(2)
+    m = w.metrics()
+    assert m["step"] == 2.0 and m["step_time_s"] == pytest.approx(100.0)
+    assert m["step_time_ewma_s"] == pytest.approx(1.0)
+    assert m["straggler"] == 1.0 and m["straggler_events_total"] == 1.0
+
+    # the next normal step clears the flag; the total is cumulative
+    w.start(); clock.t += 1.0; w.stop(3)
+    m = w.metrics()
+    assert m["straggler"] == 0.0 and m["straggler_events_total"] == 1.0
+    # every value is a plain float so the dict drops into a metrics stream
+    assert all(isinstance(v, float) for v in m.values())
+
+
 # ---------------------------------------------------------------------------
 # sharding rules
 # ---------------------------------------------------------------------------

@@ -294,6 +294,279 @@ def test_train_cell_projection_adds_no_full_weight_allgather():
     assert "OK" in out
 
 
+# HLO introspection shared by the fused_sharded tests: map every while-loop
+# body computation to the shapes of the all-reduces it contains. The
+# projection's Newton loop is the only while body allowed to communicate,
+# and it must do so exactly once per evaluation — one stacked
+# (2, num_segments) f32 psum (DESIGN.md §12).
+_WHILE_HELPER = r'''
+import re
+
+def while_body_allreduces(hlo):
+    "{while-body computation name: [all-reduce result shapes]}"
+    bodies = set(n.lstrip("%") for n in re.findall(
+        r"while\(.*?\), condition=[^,]+, body=([%\w\.\-]+)", hlo))
+    out = {}
+    for comp in re.split(r"\n(?=%?[\w\.\-]+ \(|ENTRY )", hlo):
+        lines = comp.splitlines()
+        if not lines:
+            continue
+        name = lines[0].split(" ")[0].lstrip("%")
+        if name in bodies:
+            out[name] = [s.split("{")[0] for s in
+                         re.findall(r"= (\S+) all-reduce", comp)]
+    return out
+'''
+
+
+def test_fused_sharded_cell_one_psum_per_eval_and_matches_fused():
+    """The tentpole contract: the fused_sharded train cell's HLO contains
+    zero all-gathers and its Newton while body exactly ONE all-reduce,
+    shaped f32[2, num_segments] (the stacked Eq.-(19) numerator/denominator
+    psum); params match the gathered solver="fused" step to <= 1e-5; theta
+    warm starts thread across a fused -> fused_sharded solver switch."""
+    out = _run_subprocess(_WHILE_HELPER + textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import ProjectionSpec, ProjectionEngine
+        from repro.optim.adam import AdamConfig, adam_init
+
+        rng = np.random.default_rng(0)
+        params = {
+            "enc1": {"w": jnp.asarray(rng.normal(size=(64, 256)),
+                                      jnp.float32)},
+            "blocks": {"w": jnp.asarray(rng.normal(size=(3, 64, 256)),
+                                        jnp.float32)},
+        }
+        grads = jax.tree_util.tree_map(
+            lambda p: 0.01 * jnp.asarray(rng.normal(size=p.shape),
+                                         jnp.float32), params)
+        norm = float(jnp.abs(params["enc1"]["w"]).max(axis=0).sum())
+        specs = (ProjectionSpec(pattern=r"enc1/w", norm="bilevel",
+                                radius=0.1 * norm),
+                 ProjectionSpec(pattern=r"blocks/w", norm="bilevel",
+                                radius=0.05 * norm, axis=1))
+        acfg = AdamConfig(lr=1e-3)
+
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = {
+            "enc1": {"w": NamedSharding(mesh, P("data", None))},   # FSDP
+            "blocks": {"w": NamedSharding(mesh, P(None, None, "data"))},
+        }
+        params_s = jax.device_put(params, sh)
+        grads_s = jax.device_put(grads, sh)
+
+        ref_eng = ProjectionEngine(specs, solver="fused")
+        shd_eng = ProjectionEngine(specs, solver="fused_sharded", mesh=mesh)
+        opt = adam_init(params, acfg)
+        state0 = ref_eng.init_state(params)
+        ref_step = jax.jit(lambda g, o, p, s: ref_eng.projected_update(
+            g, o, p, acfg, state=s, with_stats=True))
+        shd_step = jax.jit(lambda g, o, p, s: shd_eng.projected_update(
+            g, o, p, acfg, state=s, with_stats=True))
+
+        # --- HLO: zero all-gathers; ONE f32[2,G] psum in the Newton body
+        with mesh:
+            hlo = shd_step.lower(grads_s, opt, params_s,
+                                 state0).compile().as_text()
+        ags = [l for l in hlo.splitlines() if re.search("all-gather", l)]
+        assert not ags, "\\n".join(ags[:5])
+        comm = {k: v for k, v in while_body_allreduces(hlo).items() if v}
+        assert len(comm) == 1, comm   # only the Newton loop communicates
+        (shapes,) = comm.values()
+        G = 1 + 3                     # enc1 segment + 3 stacked blocks
+        assert shapes == [f"f32[2,{G}]"], comm
+
+        # --- step 1 (cold): params + theta match the gathered fused solve
+        p_r, o_r, s_r, st_r = ref_step(grads, opt, params, state0)
+        with mesh:
+            p_s, o_s, s_s, st_s = shd_step(grads_s, opt, params_s, state0)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(p_r),
+                                jax.tree_util.tree_leaves(p_s)))
+        k = list(s_r)[0]
+        td = float(jnp.max(jnp.abs(s_r[k] - s_s[k])))
+        print("step1 param maxdiff", d, "theta maxdiff", td)
+        assert d <= 1e-5 and td <= 1e-5, (d, td)
+        iters_cold = int(st_s[k])
+
+        # --- step 2: WARM-started across the solver switch — hand the
+        # gathered fused solver's theta to the sharded engine and vice
+        # versa; both must agree and take no more evals than the cold start
+        with mesh:
+            p_x, o_x, s_x, st_x = shd_step(grads_s, o_r, p_r, s_r)
+        p_r2, o_r2, s_r2, st_r2 = ref_step(grads, o_r, p_r, s_r)
+        d2 = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree_util.tree_leaves(p_r2),
+                                 jax.tree_util.tree_leaves(p_x)))
+        td2 = float(jnp.max(jnp.abs(s_r2[k] - s_x[k])))
+        print("switch param maxdiff", d2, "theta maxdiff", td2,
+              "iters cold/warm", iters_cold, int(st_x[k]))
+        assert d2 <= 1e-5 and td2 <= 1e-5, (d2, td2)
+        assert int(st_x[k]) <= iters_cold, (int(st_x[k]), iters_cold)
+        print("OK")
+    """))
+    assert "OK" in out
+
+
+def test_projection_engine_for_solver_selection_and_fallback():
+    """Launch policy regression: projection_engine_for picks solver="fused"
+    with no mesh / a 1-device mesh and solver="fused_sharded" on every
+    >1-device mesh shape; plans the megakernel cannot take (plain l1inf —
+    sorted prefix sums) fall back to the shard_map Newton bit-identically
+    to solver="sharded"."""
+    out = _run_subprocess("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_reduced
+        from repro.launch.steps import projection_engine_for
+        from repro.core import ProjectionSpec, ProjectionEngine
+        from repro.optim.adam import AdamConfig, adam_init
+
+        cfg = get_reduced("gemma_7b")
+        assert projection_engine_for(cfg, None).solver == "fused"
+        m1 = jax.make_mesh((1,), ("data",))
+        assert projection_engine_for(cfg, m1).solver == "fused"
+        for shape, names in (((8,), ("data",)),
+                             ((4, 2), ("data", "model"))):
+            m = jax.make_mesh(shape, names)
+            eng = projection_engine_for(cfg, m)
+            assert eng.solver == "fused_sharded", (shape, eng.solver)
+            assert eng.mesh is m
+
+        # fallback bit-identity: plain l1inf never qualifies for the fused
+        # family hook, so under solver="fused_sharded" it must replay the
+        # solver="sharded" path exactly (same ops, same fp order)
+        rng = np.random.default_rng(1)
+        params = {"enc": {"w": jnp.asarray(rng.normal(size=(64, 256)),
+                                           jnp.float32)}}
+        grads = {"enc": {"w": 0.01 * jnp.asarray(
+            rng.normal(size=(64, 256)), jnp.float32)}}
+        specs = (ProjectionSpec(pattern=r"enc/w", norm="l1inf",
+                                radius=8.0),)
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = {"enc": {"w": NamedSharding(mesh, P("data", None))}}
+        params_s = jax.device_put(params, sh)
+        grads_s = jax.device_put(grads, sh)
+        acfg = AdamConfig(lr=1e-3)
+        opt = adam_init(params, acfg)
+
+        outs = {}
+        for solver in ("fused_sharded", "sharded"):
+            eng = ProjectionEngine(specs, solver=solver, mesh=mesh)
+            state0 = eng.init_state(params)
+            step = jax.jit(lambda g, o, p, s, e=eng: e.projected_update(
+                g, o, p, acfg, state=s))
+            with mesh:
+                outs[solver] = step(grads_s, opt, params_s, state0)
+        for a, b in zip(jax.tree_util.tree_leaves(outs["fused_sharded"]),
+                        jax.tree_util.tree_leaves(outs["sharded"])):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                "fallback diverged from solver='sharded'")
+        print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_compressed_grad_reduce_composes_with_fused_sharded():
+    """dist/compression composition: per-rank DP gradient partials reduced
+    by compressed_psum inside a shard_map feed the fused_sharded
+    projected_update through its grad_reduce hook in ONE jitted step. The
+    projection's one-psum-per-Newton-evaluation contract must be unchanged
+    by the compression mode, and the mode="none" step must match the
+    gathered fused solve on the summed gradient."""
+    out = _run_subprocess(_WHILE_HELPER + textwrap.dedent("""
+        import functools
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.core import ProjectionSpec, ProjectionEngine
+        from repro.dist.compression import compressed_psum
+        from repro.optim.adam import AdamConfig, adam_init
+
+        D = 8
+        rng = np.random.default_rng(0)
+        params = {"enc": {"w": jnp.asarray(rng.normal(size=(64, 256)),
+                                           jnp.float32)}}
+        specs = (ProjectionSpec(pattern=r"enc/w", norm="bilevel",
+                                radius=20.0),)
+        # per-rank gradient partials, stacked on a leading DP dim
+        gstack = {"enc": {"w": 0.01 * jnp.asarray(
+            rng.normal(size=(D, 64, 256)), jnp.float32)}}
+        acfg = AdamConfig(lr=1e-3)
+        mesh = jax.make_mesh((8,), ("data",))
+        params_s = jax.device_put(
+            params, {"enc": {"w": NamedSharding(mesh, P(None, "data"))}})
+        gstack_s = jax.device_put(
+            gstack,
+            {"enc": {"w": NamedSharding(mesh, P("data", None, None))}})
+
+        eng = ProjectionEngine(specs, solver="fused_sharded", mesh=mesh)
+        opt = adam_init(params, acfg)
+        state0 = eng.init_state(params)
+
+        def make_step(mode):
+            def reduce_fn(gs):
+                def body(g):
+                    r = compressed_psum(g, "data", mode=mode)
+                    return jax.tree_util.tree_map(lambda x: x[0], r)
+                return shard_map(
+                    body, mesh=mesh,
+                    in_specs=(P("data", None, None),), out_specs=P(),
+                    check_rep=False)(gs)
+
+            def step(gs, o, p, s):
+                return eng.projected_update(gs, o, p, acfg, state=s,
+                                            grad_reduce=reduce_fn)
+            return jax.jit(step)
+
+        hlos = {}
+        for mode in ("none", "int8"):
+            with mesh:
+                hlos[mode] = make_step(mode).lower(
+                    gstack_s, opt, params_s, state0).compile().as_text()
+            comm = {k: v for k, v in while_body_allreduces(
+                hlos[mode]).items() if v}
+            assert len(comm) == 1, (mode, comm)
+            (shapes,) = comm.values()
+            assert shapes == ["f32[2,1]"], (mode, comm)
+        # the uncompressed composition also keeps the zero-gather contract
+        # (int8's shared-scale payload exchange is an all_gather by design,
+        # outside the projection)
+        assert "all-gather" not in hlos["none"]
+
+        # mode="none" == plain psum: bit-for-bit the summed gradient, so
+        # the composed step must match the gathered fused solve on it
+        with mesh:
+            p_c, o_c, s_c = make_step("none")(gstack_s, opt, params_s,
+                                              state0)
+        gsum = jax.tree_util.tree_map(lambda x: x.sum(0), gstack)
+        ref = ProjectionEngine(specs, solver="fused")
+        p_r, o_r, s_r = jax.jit(
+            lambda g, o, p, s: ref.projected_update(g, o, p, acfg,
+                                                    state=s))(
+            gsum, opt, params, state0)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(p_r),
+                                jax.tree_util.tree_leaves(p_c)))
+        k = list(s_r)[0]
+        td = float(jnp.max(jnp.abs(s_r[k] - s_c[k])))
+        print("composed param maxdiff", d, "theta maxdiff", td)
+        assert d <= 1e-5 and td <= 1e-5, (d, td)
+
+        # int8 mode runs end to end and stays a sane approximation
+        with mesh:
+            p_q, _, _ = make_step("int8")(gstack_s, opt, params_s, state0)
+        dq = max(float(jnp.max(jnp.abs(a - b)))
+                 for a, b in zip(jax.tree_util.tree_leaves(p_r),
+                                 jax.tree_util.tree_leaves(p_q)))
+        print("int8 param maxdiff", dq)
+        assert dq < 1e-2, dq
+        print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_sharded_serve_step_matches_dense():
     """The shard_map'd compact serving step (sae/serve.make_serve_step with
     a mesh): batch laid out over the data axis by dist.sharding rules,
