@@ -1,0 +1,261 @@
+"""Fleet serving benchmark -> ``BENCH_fleet_serve.json``.
+
+The compact decode step (BENCH_zoo_serve.json) is ~6x cheaper at the
+paper's ~99% column-sparsity regime — but a cohort batching loop only
+converts that into service throughput when all requests arrive and
+finish together. This bench measures the CONTINUOUS-batching engine
+(serve/engine.py, DESIGN.md §13) under the north-star workload: a
+synthetic open-loop arrival process with heavy-tailed generation lengths
+and checkpoint churn, over the 2x2 of {continuous, cohort} x {compact,
+dense}:
+
+  * **throughput**: sustained tokens/sec, first dispatch to last drain.
+    Gated: continuous >= 2x cohort at the ~99% regime on the compact
+    path — the cohort barrier idles every slot whose row finished until
+    the whole batch drains (one long request per cohort pins slot
+    efficiency near (B-1)*s/(B*L)), while the engine re-admits freed
+    slots immediately;
+  * **latency**: per-request TTFT and inter-token percentiles
+    (p50/p95/p99) from the engine's drain-time clock, both modes
+    (admission-to-first-token — queueing delay ahead of admission is the
+    arrival process's, not the server's);
+  * **churn**: one mid-stream hot refresh plus one live re-compaction,
+    fired at fixed request-completion fractions so BOTH disciplines pay
+    the identical checkpoint-swap cost. The churn checkpoints carry the
+    SAME values (refresh re-gather and identity recompact are exercised
+    on-path with zero semantic change), so exactness is checked ACROSS
+    the churn run. Gated: zero extra traces — admit/evict/refresh/
+    recompact all reuse the one compiled step;
+  * **exactness**: every request's continuous-compact tokens equal the
+    continuous-dense tokens (structural zeros: bit-identical), and a
+    sample is re-served solo — gated zero mismatches (the ragged==solo
+    contract survives slot churn).
+
+Schema documented in benchmarks/README.md; CI uploads the JSON artifact
+and ``scripts/check.sh --bench-smoke`` enforces the gates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.configs import get_reduced
+from repro.models.zoo import build
+from repro.serve import EngineConfig, FleetEngine, RecompactScheduler, \
+    compact_model
+
+from .run import bench_meta
+from .zoo_serve_bench import _bisect_regime, _W1, _W2
+
+Row = Tuple[str, float, str]
+
+_SMAX = 64
+_SHORT, _LONG = 4, 56     # heavy-tailed generation budgets
+_PLENS = (2, 3, 4, 5)     # deterministic prompt-length cycle
+
+
+def _workload(n_requests: int, batch: int):
+    """Deterministic open-loop arrivals: four requests per step, one LONG
+    request per ``batch`` arrivals (so every cohort of B contains exactly
+    one — the worst honest case for cohort batching, not an adversarial
+    clustering)."""
+    reqs = []
+    for i in range(n_requests):
+        plen = _PLENS[i % len(_PLENS)]
+        prompt = [(7 * i + j) % 97 + 1 for j in range(plen)]
+        budget = _LONG if i % batch == batch // 2 else _SHORT
+        reqs.append({"arrival_step": i // 4, "prompt": prompt,
+                     "budget": budget})
+    return reqs
+
+
+def _run_continuous(eng: FleetEngine, reqs, churn=None):
+    """Open-loop serve: admit each request at its arrival step, run until
+    drained. ``churn(n_done, eng)`` fires after every step with the
+    completed-request count — the same hook the cohort runner drives, so
+    both disciplines pay identical checkpoint-swap costs. Returns
+    (tokens by request index, sustained tok/s, steps)."""
+    eng.step()
+    eng.flush()               # compile + warm outside the timed window
+    done: Dict[int, List[int]] = {}
+    rid_of = {}
+    i = step = 0
+    t0 = time.perf_counter()
+    while True:
+        while i < len(reqs) and reqs[i]["arrival_step"] <= step:
+            rid_of[eng.submit(reqs[i]["prompt"], reqs[i]["budget"])] = i
+            i += 1
+        for c in eng.step():
+            done[rid_of[c.rid]] = c.tokens
+        step += 1
+        if churn is not None:
+            churn(len(done), eng)
+        st = eng.stats()
+        if i >= len(reqs) and st["busy_slots"] == 0 and st["queue"] == 0:
+            break
+    for c in eng.flush():
+        done[rid_of[c.rid]] = c.tokens
+    wall = time.perf_counter() - t0
+    n_tok = sum(r["budget"] for r in reqs)
+    return done, n_tok / wall, step
+
+
+def _run_cohort(eng: FleetEngine, reqs, batch: int, churn=None):
+    """Cohort baseline: admit B requests, BARRIER until all finish, admit
+    the next B — the pre-engine ``generate`` service discipline. Same
+    compiled step, same requests, same churn hook."""
+    eng.step()
+    eng.flush()
+    done: Dict[int, List[int]] = {}
+    steps = 0
+    t0 = time.perf_counter()
+    for lo in range(0, len(reqs), batch):
+        cohort = reqs[lo: lo + batch]
+        rid_of = {eng.submit(r["prompt"], r["budget"]): lo + j
+                  for j, r in enumerate(cohort)}
+        pending = set(rid_of)
+        while pending:
+            for c in eng.step():
+                done[rid_of[c.rid]] = c.tokens
+                pending.discard(c.rid)
+            steps += 1
+            if churn is not None:
+                churn(len(done), eng)
+        for c in eng.flush():
+            done[rid_of[c.rid]] = c.tokens
+            pending.discard(c.rid)
+    wall = time.perf_counter() - t0
+    n_tok = sum(r["budget"] for r in reqs)
+    return done, n_tok / wall, steps
+
+
+def fleet_serve_report(quick: bool = True,
+                       out: str = "BENCH_fleet_serve.json") -> List[Row]:
+    d_ff = 4096 if quick else 8192
+    B = 8 if quick else 16
+    n_requests = 5 * B
+    cfg = dataclasses.replace(get_reduced("gemma_7b"), n_layers=2,
+                              d_model=128, d_ff=d_ff)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # the paper's serving regime (same bisection as BENCH_zoo_serve)
+    params, spec_w1 = _bisect_regime(params, _W1, "w1", target_alive=0.01)
+    params, spec_w2 = _bisect_regime(params, _W2, "w2", target_alive=0.5)
+    cm = compact_model(params, (spec_w1, spec_w2))
+    w1_path = "blocks/p0_global/mlp/w1"
+    colsp = 100.0 * (1.0 - cm.supports[w1_path].ratio)
+
+    reqs = _workload(n_requests, B)
+    ecfg = EngineConfig(max_seq=_SMAX)
+
+    # Checkpoint churn, fired at fixed request-completion fractions so
+    # BOTH disciplines swap weights at the same workload progress: one hot
+    # refresh at 35% done, one live re-compaction at 70%. Same-value
+    # checkpoints — the refresh re-gather and an identity recompact run on
+    # the measured path with zero semantic change, so exactness is checked
+    # ACROSS the churn (see module docstring).
+    def make_churn():
+        log = {"refresh": 0, "recompact": 0}
+
+        def churn(n_done, eng):
+            if not log["refresh"] and n_done >= 0.35 * n_requests:
+                eng.refresh(params)
+                log["refresh"] += 1
+            elif not log["recompact"] and n_done >= 0.7 * n_requests:
+                eng.recompact(params)
+                log["recompact"] += 1
+
+        return churn, log
+
+    # ---- continuous + compact, under checkpoint churn (headline) --------
+    churn_cont, churn_log = make_churn()
+    cont = FleetEngine(model, B, ecfg,
+                       scheduler=RecompactScheduler(threshold=0.9))
+    cont.load_compact(cm)
+    tok_cont, tok_s_cont, steps_cont = _run_continuous(cont, reqs,
+                                                       churn_cont)
+    lat_cont = cont.latency_report()
+    extra_traces = cont.n_traces - 1
+
+    # ---- cohort + compact under the same churn (the 2x gate baseline) ---
+    churn_coh, churn_log_coh = make_churn()
+    coh = FleetEngine(model, B, ecfg,
+                      scheduler=RecompactScheduler(threshold=0.9))
+    coh.load_compact(cm)
+    tok_coh, tok_s_coh, steps_coh = _run_cohort(coh, reqs, B, churn_coh)
+    lat_coh = coh.latency_report()
+
+    # ---- dense, both disciplines ----------------------------------------
+    cont_d = FleetEngine(model, B, ecfg)
+    cont_d.load(params)
+    tok_cont_d, tok_s_cont_d, _ = _run_continuous(cont_d, reqs)
+    coh_d = FleetEngine(model, B, ecfg)
+    coh_d.load(params)
+    _, tok_s_coh_d, _ = _run_cohort(coh_d, reqs, B)
+
+    # ---- exactness ------------------------------------------------------
+    mism_dense = sum(tok_cont[i] != tok_cont_d[i]
+                     for i in range(n_requests))
+    mism_cohort = sum(tok_cont[i] != tok_coh[i] for i in range(n_requests))
+    solo = FleetEngine(model, 1, ecfg)
+    solo.load_compact(cm)
+    sample = list(range(0, n_requests, max(1, n_requests // 4)))[:4]
+    mism_solo = 0
+    for i in sample:
+        solo.submit(reqs[i]["prompt"], reqs[i]["budget"])
+        mism_solo += solo.drain()[0].tokens != tok_cont[i]
+
+    n_tok = sum(r["budget"] for r in reqs)
+    speedup = tok_s_cont / tok_s_coh
+    report = {
+        "meta": bench_meta(quick=quick),
+        "regime": {"arch": cfg.name, "d_model": cfg.d_model, "d_ff": d_ff,
+                   "n_layers": cfg.n_layers, "batch_slots": B,
+                   "column_sparsity_pct": colsp, "max_seq": _SMAX},
+        "workload": {"n_requests": n_requests, "total_new_tokens": n_tok,
+                     "short_budget": _SHORT, "long_budget": _LONG,
+                     "long_every": B, "arrivals_per_step": 4},
+        "throughput": {
+            "continuous_compact_tok_s": tok_s_cont,
+            "cohort_compact_tok_s": tok_s_coh,
+            "continuous_dense_tok_s": tok_s_cont_d,
+            "cohort_dense_tok_s": tok_s_coh_d,
+            "speedup_continuous_vs_cohort": speedup,
+            "speedup_compact_vs_dense_continuous":
+                tok_s_cont / tok_s_cont_d,
+            "steps": {"continuous": steps_cont, "cohort": steps_coh},
+            "slot_efficiency": {
+                "continuous": n_tok / (B * steps_cont),
+                "cohort": n_tok / (B * steps_coh)},
+        },
+        "latency": {"continuous": lat_cont, "cohort": lat_coh},
+        "churn": {"continuous": churn_log, "cohort": churn_log_coh,
+                  "extra_traces": extra_traces,
+                  "traces": {"continuous": cont.n_traces,
+                             "cohort": coh.n_traces}},
+        "exactness": {"token_mismatches_vs_dense": int(mism_dense),
+                      "token_mismatches_vs_cohort": int(mism_cohort),
+                      "token_mismatches_vs_solo": int(mism_solo),
+                      "n_solo_checked": len(sample)},
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+
+    ctx = f"colsp={colsp:.1f}%;B={B};N={n_requests}"
+    return [
+        ("fleet_serve/continuous_compact", 1e6 / tok_s_cont,
+         f"{ctx};tok_s={tok_s_cont:.0f};speedup_vs_cohort={speedup:.2f}x;"
+         f"extra_traces={extra_traces}"),
+        ("fleet_serve/cohort_compact", 1e6 / tok_s_coh,
+         f"{ctx};tok_s={tok_s_coh:.0f};"
+         f"slot_eff={n_tok / (B * steps_coh):.2f}"),
+        ("fleet_serve/continuous_dense", 1e6 / tok_s_cont_d,
+         f"{ctx};tok_s={tok_s_cont_d:.0f}"),
+        ("fleet_serve/cohort_dense", 1e6 / tok_s_coh_d,
+         f"{ctx};tok_s={tok_s_coh_d:.0f}"),
+    ]

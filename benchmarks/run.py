@@ -49,8 +49,8 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
 
-    from . import (fused_step_bench, proj_bench, sae_bench, serve_bench,
-                   zoo_serve_bench)
+    from . import (fleet_serve_bench, fused_step_bench, proj_bench,
+                   sae_bench, serve_bench, zoo_serve_bench)
 
     benches = []
     if args.quick:
@@ -68,6 +68,8 @@ def main() -> None:
             ("serve", lambda: serve_bench.serve_report(quick=True)),
             ("zoo_serve",
              lambda: zoo_serve_bench.zoo_serve_report(quick=True)),
+            ("fleet_serve",
+             lambda: fleet_serve_bench.fleet_serve_report(quick=True)),
         ]
     else:
         benches = [
@@ -86,6 +88,8 @@ def main() -> None:
             ("serve", lambda: serve_bench.serve_report(quick=False)),
             ("zoo_serve",
              lambda: zoo_serve_bench.zoo_serve_report(quick=False)),
+            ("fleet_serve",
+             lambda: fleet_serve_bench.fleet_serve_report(quick=False)),
             ("table1", lambda: sae_bench.table1_synthetic(full=args.full)),
             ("table2", sae_bench.table2_lung),
             ("fig5-8", sae_bench.fig_radius_curves),

@@ -38,6 +38,7 @@ AUDITED_MODULES = [
     "src/repro/sae/serve.py",
     "src/repro/serve/compact.py",
     "src/repro/serve/refresh.py",
+    "src/repro/serve/engine.py",
     "src/repro/kernels/fused_step/ops.py",
 ]
 

@@ -189,8 +189,10 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      window: int = 0) -> jnp.ndarray:
     """One-token attention against a cache.
 
-    q: (B, 1, KV, R, hd); caches: (B, Smax, KV, hd); pos: scalar current
-    position (tokens at indices <= pos are valid).
+    q: (B, 1, KV, R, hd); caches: (B, Smax, KV, hd); pos: current position
+    (tokens at indices <= pos are valid) — a scalar shared by the batch
+    (cohort decode) or a (B,) vector of per-row positions (continuous
+    batching: every slot sits at its own depth, DESIGN.md §13).
     """
     B, _, KVh, R, hd = q.shape
     Smax = k_cache.shape[1]
@@ -198,13 +200,39 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     logits = jnp.einsum("bqkrh,bskh->bqkrs", q.astype(jnp.float32),
                         k_cache.astype(jnp.float32)) * scale
     kv_pos = jnp.arange(Smax)
-    valid = kv_pos <= pos
+    pos = jnp.asarray(pos)
+    pos_b = pos[:, None] if pos.ndim else pos
+    valid = kv_pos <= pos_b                       # () or (B,) -> bcast
     if window:
-        valid &= kv_pos > pos - window
-    logits = jnp.where(valid[None, None, None, None, :], logits, _NEG)
+        valid &= kv_pos > pos_b - window
+    valid = jnp.broadcast_to(valid, (B, Smax))
+    logits = jnp.where(valid[:, None, None, None, :], logits, _NEG)
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bqkrs,bskh->bqkrh", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def _decode_positions(pos, B: int) -> jnp.ndarray:
+    """Normalize a decode position argument to (B, 1) int32 for RoPE:
+    scalar pos broadcasts over the batch, a (B,) vector is per-row."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jnp.full((B, 1), pos, jnp.int32)
+    return pos.astype(jnp.int32)[:, None]
+
+
+def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos) -> jnp.ndarray:
+    """Write one new timestep into a (B, Smax, ...) cache at `pos` — a
+    dynamic_update_slice for scalar pos (cohort decode), a per-row scatter
+    for (B,) pos (continuous batching). Values written are identical; the
+    scatter drops out-of-range rows (inactive slots clamp their pos)."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(
+            cache, new.astype(cache.dtype), pos, axis=1)
+    B = cache.shape[0]
+    return cache.at[jnp.arange(B), pos].set(new[:, 0].astype(cache.dtype),
+                                            mode="drop")
 
 
 # ------------------------------ GQA module ----------------------------------
@@ -266,16 +294,15 @@ def attn_decode(params, x, cache: Tuple[jnp.ndarray, jnp.ndarray],
                 window: int = 0, rope_theta: float = 10000.0,
                 rope_frac: float = 1.0):
     """One-token decode. x: (B, 1, d); cache: (k, v) each (B, Smax, KV, hd);
-    pos: scalar int32 index of the new token. Returns (y, new_cache)."""
+    pos: int32 index of the new token — scalar (whole batch at one depth)
+    or (B,) per-row (continuous batching). Returns (y, new_cache)."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = _decode_positions(pos, B)
     q, k_new, v_new = _project_qkv(params, x, n_heads, n_kv, head_dim,
                                    positions, rope_theta, rope_frac)
     k_cache, v_cache = cache
-    k_cache = jax.lax.dynamic_update_slice_in_dim(
-        k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(
-        v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    k_cache = _cache_write(k_cache, k_new, pos)
+    v_cache = _cache_write(v_cache, v_new, pos)
     k_cache = shard(k_cache, "cache_batch", "cache_seq", "kv_heads", None)
     v_cache = shard(v_cache, "cache_batch", "cache_seq", "kv_heads", None)
     R = n_heads // n_kv
@@ -359,21 +386,23 @@ def mla_decode(params, x, cache, pos, *, n_heads: int, nope: int,
                absorb: bool = False):
     """MLA decode with the *compressed* cache (c, k_rope) — (B, Smax,
     kv_lora) + (B, Smax, rope). `absorb=True` uses the matrix-absorbed form
-    (q projected into latent space; no per-step K/V materialization)."""
+    (q projected into latent space; no per-step K/V materialization).
+    `pos` may be a scalar or a (B,) per-row position vector."""
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    positions = _decode_positions(pos, B)
     q_nope, q_rope, c_new, k_rope_new = _mla_qkv(
         params, x, n_heads, nope, rope_dim, positions, rope_theta)
     c_cache, kr_cache = cache
-    c_cache = jax.lax.dynamic_update_slice_in_dim(
-        c_cache, c_new.astype(c_cache.dtype), pos, axis=1)
-    kr_cache = jax.lax.dynamic_update_slice_in_dim(
-        kr_cache, k_rope_new.astype(kr_cache.dtype), pos, axis=1)
+    c_cache = _cache_write(c_cache, c_new, pos)
+    kr_cache = _cache_write(kr_cache, k_rope_new, pos)
     c_cache = shard(c_cache, "cache_batch", "cache_seq", None)
     kr_cache = shard(kr_cache, "cache_batch", "cache_seq", None)
     Smax = c_cache.shape[1]
     scale = (nope + rope_dim) ** -0.5
-    valid = jnp.arange(Smax) <= pos
+    pos_a = jnp.asarray(pos)
+    valid = jnp.broadcast_to(
+        jnp.arange(Smax) <= (pos_a[:, None] if pos_a.ndim else pos_a),
+        (B, Smax))
 
     if absorb:
         # q_nope (B,1,H,nope) @ wk_b^T -> latent space (B,1,H,kv_lora)
@@ -383,7 +412,7 @@ def mla_decode(params, x, cache, pos, *, n_heads: int, nope: int,
                              c_cache.astype(jnp.float32))
                   + jnp.einsum("bqhk,bsk->bqhs", q_rope.astype(jnp.float32),
                                kr_cache.astype(jnp.float32))) * scale
-        logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+        logits = jnp.where(valid[:, None, None, :], logits, _NEG)
         p = jax.nn.softmax(logits, axis=-1)
         o_lat = jnp.einsum("bqhs,bsl->bqhl", p, c_cache.astype(jnp.float32))
         out = jnp.einsum("bqhl,lhk->bqhk", o_lat,
@@ -397,7 +426,7 @@ def mla_decode(params, x, cache, pos, *, n_heads: int, nope: int,
         q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
         logits = jnp.einsum("bqhk,bshk->bqhs", q_full.astype(jnp.float32),
                             k_full.astype(jnp.float32)) * scale
-        logits = jnp.where(valid[None, None, None, :], logits, _NEG)
+        logits = jnp.where(valid[:, None, None, :], logits, _NEG)
         p = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bqhs,bshk->bqhk", p,
                          v.astype(jnp.float32)).astype(x.dtype)

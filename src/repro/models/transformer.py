@@ -454,14 +454,20 @@ def _block_decode(params, x, kind: str, cfg: ArchConfig, cache, pos):
 
 
 def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
-    """One serving step: tokens (B, 1) int32 at position `pos` (scalar).
+    """One serving step: tokens (B, 1) int32 at position `pos` — a scalar
+    (cohort decode: the whole batch sits at one depth) or a (B,) int32
+    vector of per-row positions (continuous batching, DESIGN.md §13).
     Returns (logits (B, 1, V) f32, new_cache)."""
     x = L.embed_apply(params["embed"], tokens,
                       scale=np.sqrt(cfg.d_model) if cfg.embed_scale else None)
     if not cfg.rope_theta:
         table = L.sinusoidal_positions(cache_max_len(cache, cfg), cfg.d_model)
-        x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0
-                                             ).astype(x.dtype)[None]
+        pos_a = jnp.asarray(pos)
+        if pos_a.ndim:                    # per-row absolute positions
+            x = x + jnp.take(table, pos_a, axis=0).astype(x.dtype)[:, None]
+        else:
+            x = x + jax.lax.dynamic_slice_in_dim(table, pos, 1, axis=0
+                                                 ).astype(x.dtype)[None]
     cycles, rem = _split_pattern(cfg)
     new_cache: Dict[str, Any] = {}
     if cycles:

@@ -11,13 +11,22 @@ through the frozen ``sel``, never recompiles) and ``recompact_model``
 (periodic live re-compaction: support only shrinks under the frozen mask,
 so the re-gather is monotone and shape-preserving).
 
+``engine.py`` owns the serving loop itself — ``FleetEngine``, the
+continuous-batching engine (DESIGN.md §13) that keeps one compiled decode
+step hot under churn: on-device slot state, in-step sampling, masked
+admission, donated cache, and a ``RecompactScheduler`` that turns
+checkpoint refreshes into live re-compactions with hysteresis.
+
 The SAE path (``sae/serve.py``) and the LM zoo path (``train/serve.py``'s
 ``BatchServer``) are both thin adapters over this layer.
 """
 from .compact import (LeafSupport, support_selection, CompactRule, ZOO_RULES,
                       CompactModel, compact_model)
 from .refresh import refresh_model, recompact_model
+from .engine import (EngineConfig, Request, Completion, LatencyStats,
+                     RecompactScheduler, FleetEngine)
 
 __all__ = ["LeafSupport", "support_selection", "CompactRule", "ZOO_RULES",
            "CompactModel", "compact_model", "refresh_model",
-           "recompact_model"]
+           "recompact_model", "EngineConfig", "Request", "Completion",
+           "LatencyStats", "RecompactScheduler", "FleetEngine"]

@@ -1,56 +1,52 @@
-"""Batched serving loop: prefill (via teacher-forced cache fill) + decode.
+"""Batched serving: the cohort ``generate`` API over the fleet engine.
 
-The decode step is the same jit'd ``decode_step`` the dry-run lowers; the
-server adds greedy/temperature sampling and a simple continuous-batching
-slot manager (finished rows are replaced by queued requests without
-recompiling — the cache is a fixed-shape ring of slots).
+``BatchServer`` keeps the PR-6 surface (``load`` / ``load_compact`` /
+``refresh`` / ``recompact`` / ``generate`` / ``n_traces``) but is now a
+thin adapter over ``serve.engine.FleetEngine`` (DESIGN.md §13): per-slot
+state (position, budget, active mask, feed token) lives on device,
+sampling and next-feed selection run inside the ONE jitted step, and the
+KV cache + slot state are donated — ``generate`` is just "submit the
+cohort, drain the engine". That removes the old per-token host↔device
+round-trip and the per-``generate`` cache allocation, and fixes two
+long-standing issues:
 
-Ragged prompts run CONTINUOUSLY per row: every row feeds its own next
-token at every position — prompt tokens while the prompt lasts, then its
-own samples — so a short row never feeds pad tokens into its cache and a
-ragged batch reproduces the single-prompt outputs exactly (regression:
-tests/test_zoo_serve.py).
+* the KV cache is allocated in ``cache_dtype`` (default: the
+  checkpoint's param dtype) instead of hard-coded ``float32`` — bf16
+  checkpoints decode through bf16 caches;
+* a row whose prompt is long relative to ``max_seq`` no longer truncates
+  silently: ``generate(..., with_meta=True)`` returns the per-request
+  ``Completion`` records whose ``truncated`` flag says the row ran out
+  of cache depth before emitting its full ``max_new`` budget.
 
-Compact serving (DESIGN.md §10): ``load_compact`` serves a
-``serve.CompactModel`` through the SAME jit'd step (the sel index leaves
-ride in the param tree, and the compact widths are just different static
-shapes); ``refresh`` hot-swaps a new dense checkpoint through the frozen
-gather recipe and ``recompact`` runs live re-compaction — both are
-shape-preserving, so neither retraces (``n_traces`` exposes the counter
-the no-retrace tests assert on).
+Ragged prompts still run CONTINUOUSLY per row (each row feeds its own
+next token — prompt tokens while the prompt lasts, then its own
+samples), so a ragged batch reproduces the single-prompt outputs exactly
+(regression: tests/test_zoo_serve.py). The old one-cohort-at-a-time
+limit is gone: ``generate`` accepts more prompts than slots and the
+engine streams them through freed slots.
+
+Compact serving (DESIGN.md §10) is unchanged in contract: sel leaves
+ride in the param tree, ``refresh``/``recompact`` are shape-preserving,
+and ``n_traces`` counts exactly one trace across the whole lifecycle.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
-
-import numpy as np
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
+from typing import Any, List, Optional, Tuple
 
 from ..models.zoo import Model
-from ..models.transformer import init_cache, decode_step
-from ..serve import CompactModel, compact_model, refresh_model, \
-    recompact_model
+from ..serve import CompactModel
+from ..serve.engine import Completion, EngineConfig, FleetEngine, \
+    RecompactScheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Cohort-API serving knobs (a subset of ``serve.EngineConfig``)."""
     max_seq: int = 256
     temperature: float = 0.0     # 0 = greedy
     seed: int = 0
-
-
-def _cache_specs(cache, batch_axes):
-    """Per-leaf PartitionSpecs sharding the batch dim of a decode cache:
-    axis 1 for scan-stacked block caches (leading dim = cycles), axis 0
-    for unstacked remainder blocks."""
-    out = {}
-    for key, sub in cache.items():
-        spec = P(None, batch_axes) if key == "blocks" else P(batch_axes)
-        out[key] = jax.tree_util.tree_map(lambda _: spec, sub)
-    return out
+    cache_dtype: Any = None      # None -> match the checkpoint's dtype
 
 
 class BatchServer:
@@ -58,124 +54,81 @@ class BatchServer:
 
     ``mesh`` (optional) turns the decode step into a shard_map over the
     mesh axes the sharding rules assign to "batch" (params replicated,
-    cache + tokens batch-sharded; rows are independent, so the step body
-    contains zero collectives — asserted in tests/test_multidevice.py).
+    cache + slot state batch-sharded; rows are independent, so the step
+    body contains zero collectives — asserted in tests/test_multidevice.py).
+    ``scheduler`` (optional ``serve.RecompactScheduler``) lets ``refresh``
+    upgrade itself to a live re-compaction when the live/slot ratio of a
+    new checkpoint decays past the scheduler's threshold.
     """
 
     def __init__(self, model: Model, batch_slots: int, scfg: ServeConfig,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None,
+                 scheduler: Optional[RecompactScheduler] = None):
         self.model = model
         self.cfg = model.cfg
         self.scfg = scfg
         self.B = batch_slots
-        self.params = None
-        self.compact: Optional[CompactModel] = None
-        self.n_traces = 0            # bumps at TRACE time only (jit)
-        self._mesh = mesh
-        self._rules = rules
-        self._step = None            # built lazily: cache specs need shapes
+        self.engine = FleetEngine(
+            model, batch_slots,
+            EngineConfig(max_seq=scfg.max_seq,
+                         temperature=scfg.temperature,
+                         seed=scfg.seed,
+                         cache_dtype=scfg.cache_dtype),
+            mesh=mesh, rules=rules, scheduler=scheduler)
 
     # ---------------------- checkpoint lifecycle -------------------------
 
+    @property
+    def params(self):
+        """The currently-served param tree (dense or compact)."""
+        return self.engine.params
+
+    @property
+    def compact(self) -> Optional[CompactModel]:
+        """The served ``CompactModel`` (None when serving dense)."""
+        return self.engine.compact
+
+    @property
+    def n_traces(self) -> int:
+        """Jit traces of the decode step (the no-retrace contract)."""
+        return self.engine.n_traces
+
     def load(self, params):
         """Serve a dense checkpoint (drops any compact state)."""
-        self.params = params
-        self.compact = None
+        self.engine.load(params)
 
     def load_compact(self, compact: Optional[CompactModel] = None, *,
                      params=None):
         """Serve a compacted checkpoint. Pass a prebuilt
         ``serve.CompactModel``, or a dense ``params`` tree to compact here
         under the model's own ``projection_specs``."""
-        if compact is None:
-            compact = compact_model(params, self.cfg.projection_specs)
-        self.compact = compact
-        self.params = compact.params
+        self.engine.load_compact(compact, params=params)
 
     def refresh(self, new_dense_params):
         """Hot refresh: re-gather a NEW dense checkpoint through the frozen
         compact recipe. Shapes unchanged — the jit'd step never retraces."""
-        self.compact = refresh_model(self.compact, new_dense_params)
-        self.params = self.compact.params
+        self.engine.refresh(new_dense_params)
 
     def recompact(self, new_dense_params):
         """Live re-compaction: adopt the new checkpoint's (monotonically
         smaller) support inside the frozen slot widths. No retrace."""
-        self.compact = recompact_model(self.compact, new_dense_params)
-        self.params = self.compact.params
-
-    # ---------------------- step construction ---------------------------
-
-    def _build_step(self, cache):
-        def traced(p, c, t, pos):
-            self.n_traces += 1       # python side effect: trace-time only
-            return decode_step(p, c, t, pos, self.cfg)
-
-        if self._mesh is None:
-            return jax.jit(traced)
-
-        from jax.experimental.shard_map import shard_map
-        from ..dist.sharding import default_rules
-        rules = dict(default_rules() if self._rules is None else self._rules)
-        batch_axes = rules.get("batch")
-        if batch_axes is None:
-            raise ValueError(
-                "BatchServer: the sharding rules map 'batch' to None — "
-                "every rank would redundantly serve the FULL batch; name a "
-                "mesh axis for 'batch' (see dist.sharding.default_rules)")
-        cspecs = _cache_specs(cache, batch_axes)
-        fn = shard_map(traced, mesh=self._mesh,
-                       in_specs=(P(), cspecs, P(batch_axes), P()),
-                       out_specs=(P(batch_axes), cspecs),
-                       check_rep=False)
-        return jax.jit(fn)
+        self.engine.recompact(new_dense_params)
 
     # ---------------------- generation ----------------------------------
 
-    def generate(self, prompts: List[List[int]],
-                 max_new: int = 32) -> List[List[int]]:
-        """Greedy/temperature generation for up to B prompts.
-        Prefill is performed by stepping the cache through the prompt tokens
-        (teacher forcing) — exactly the decode path, so serving exercises the
-        same compiled step as the dry-run. Rows advance independently: row i
-        samples its first token the step its LAST prompt token goes in, and
-        feeds its own samples from then on, so ragged batches never see pad
-        tokens and match the uniform-length outputs exactly."""
-        assert len(prompts) <= self.B
-        B = self.B
-        Smax = self.scfg.max_seq
-        cache = init_cache(self.cfg, B, Smax, jnp.float32)
-        if self._step is None:
-            self._step = self._build_step(cache)
-        key = jax.random.PRNGKey(self.scfg.seed)
-
-        lens = [len(p) for p in prompts] + [1] * (B - len(prompts))
-        maxlen = max(lens)
-        out = [list(p) for p in prompts] + [[] for _ in range(B - len(prompts))]
-        done = [len(prompts) <= i for i in range(B)]
-        feed = np.zeros((B,), np.int32)
-        for i, p in enumerate(prompts):
-            feed[i] = p[0]
-
-        n_new = [0] * B
-        for pos in range(min(Smax, maxlen + max_new - 1)):
-            logits, cache = self._step(self.params, cache,
-                                       jnp.asarray(feed)[:, None],
-                                       jnp.asarray(pos))
-            if self.scfg.temperature > 0:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(
-                    sub, logits[:, -1, :] / self.scfg.temperature, axis=-1)
-            else:
-                nxt = jnp.argmax(logits[:, -1, :], axis=-1)
-            nxt = np.asarray(nxt, np.int32)
-            for i in range(B):
-                if pos + 1 < lens[i]:
-                    feed[i] = out[i][pos + 1]      # still feeding the prompt
-                elif not done[i] and n_new[i] < max_new:
-                    out[i].append(int(nxt[i]))     # row i's own sample
-                    feed[i] = nxt[i]
-                    n_new[i] += 1
-                    if n_new[i] >= max_new:
-                        done[i] = True
-        return out[: len(prompts)]
+    def generate(self, prompts: List[List[int]], max_new: int = 32,
+                 with_meta: bool = False):
+        """Greedy/temperature generation for the given prompts (any count —
+        beyond B they stream through freed slots). Prefill steps the cache
+        through the prompt tokens (teacher forcing) — exactly the decode
+        path, so serving exercises the same compiled step as the dry-run.
+        Rows advance independently, so ragged batches never see pad tokens
+        and match solo outputs exactly. Returns prompt+generated token
+        lists; with ``with_meta=True`` also the per-request ``Completion``
+        records (TTFT, per-token times, the ``truncated`` flag)."""
+        rids = [self.engine.submit(p, max_new, sample_seed=i)
+                for i, p in enumerate(prompts)]
+        by_rid = {c.rid: c for c in self.engine.drain()}
+        comps = [by_rid[r] for r in rids]
+        outs = [c.tokens for c in comps]
+        return (outs, comps) if with_meta else outs

@@ -1,0 +1,279 @@
+"""Continuous-batching fleet engine (serve/engine.py, DESIGN.md §13).
+
+Covers the PR-9 contract: requests admitted into freed slots mid-flight
+are token-identical to solo generation (extending the PR-6 ragged==solo
+regression), the cache/slot donation no-copy argument, the bf16 cache
+dtype fix and the truncation flag (satellites 1–2), the re-compaction
+scheduler's hysteresis (no thrash at the threshold) and mid-flight
+re-compaction bit-exactness (satellite 3), and the zero-retrace
+lifecycle across admit/evict/refresh/recompact.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models.zoo import build
+from repro.models.transformer import decode_step, init_cache
+from repro.serve import (EngineConfig, FleetEngine, LatencyStats,
+                         RecompactScheduler, compact_model)
+from repro.train.serve import BatchServer, ServeConfig
+
+
+def _tiny(n_layers=2, **over):
+    """A gemma variant small enough for the single-core CI box: the same
+    block layout (p0_global MLP) the compact specs match, tiny widths."""
+    cfg = dataclasses.replace(
+        get_reduced("gemma_7b"), n_layers=n_layers, d_model=64, d_ff=128,
+        n_heads=2, n_kv_heads=1, head_dim=32, **over)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _kill_w1_columns(params, cols):
+    """Zero the given w1 hidden columns (simulated projected training)."""
+    out = jax.tree_util.tree_map(lambda a: a, params)
+    mlp = out["blocks"]["p0_global"]["mlp"]
+    arr = np.array(mlp["w1"])
+    arr[:, :, list(cols)] = 0.0
+    mlp["w1"] = jnp.asarray(arr)
+    return out
+
+
+def _solo(model, prompt, max_new, max_seq=32, **ecfg):
+    """Solo reference: a fresh 1-slot engine serving one prompt."""
+    eng = FleetEngine(model, 1, EngineConfig(max_seq=max_seq, **ecfg))
+    eng.load(_solo.params)
+    eng.submit(prompt, max_new)
+    return eng.drain()[0].tokens
+
+
+def test_midflight_admission_matches_solo():
+    """Satellite 4: requests admitted into freed slots mid-flight produce
+    token-identical outputs to solo generation — slot reuse must not leak
+    the previous occupant's cache rows."""
+    cfg, model, params = _tiny()
+    _solo.params = params
+    eng = FleetEngine(model, 2, EngineConfig(max_seq=32))
+    eng.load(params)
+    prompts = [[1, 2, 3], [4, 5], [7], [8, 9, 3, 1], [3, 1]]
+    budgets = [6, 2, 2, 5, 3]          # heavy-tailed: slots churn
+    rids = [eng.submit(p, n) for p, n in zip(prompts, budgets)]
+    got = {c.rid: c for c in eng.drain()}
+    assert eng.n_traces == 1
+    assert eng.stats()["busy_slots"] == 0 and eng.stats()["queue"] == 0
+    for p, n, r in zip(prompts, budgets, rids):
+        assert len(got[r].generated) == n
+        assert got[r].tokens == _solo(model, p, n), \
+            f"rid {r} diverges from solo serving"
+
+
+def test_bf16_cache_dtype_and_decode_parity():
+    """Satellite 1: the KV cache follows the checkpoint dtype (bf16
+    checkpoints no longer decode through a hard-coded f32 cache), and the
+    engine's bf16 decode reproduces a hand cohort loop token for token."""
+    cfg, model, params = _tiny(n_layers=1)
+    bf16 = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.bfloat16)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    srv = BatchServer(model, batch_slots=2, scfg=ServeConfig(max_seq=32))
+    srv.load(bf16)
+    prompts = [[1, 2, 3], [4, 5]]
+    outs = srv.generate(prompts, max_new=5)
+    dtypes = {a.dtype for a in jax.tree_util.tree_leaves(srv.engine._cache)}
+    assert dtypes == {jnp.bfloat16.dtype}, dtypes
+
+    # hand cohort loop: scalar-pos decode_step on a bf16 cache
+    B, Smax = 2, 32
+    cache = init_cache(cfg, B, Smax, jnp.bfloat16)
+    step = jax.jit(lambda p, c, t, pos: decode_step(p, c, t, pos, cfg))
+    lens = [len(p) for p in prompts]
+    out = [list(p) for p in prompts]
+    feed = np.asarray([p[0] for p in prompts], np.int32)
+    n_new = [0, 0]
+    for pos in range(max(lens) + 5 - 1):
+        logits, cache = step(bf16, cache, jnp.asarray(feed)[:, None],
+                             jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1), np.int32)
+        for i in range(B):
+            if pos + 1 < lens[i]:
+                feed[i] = out[i][pos + 1]
+            elif n_new[i] < 5:
+                out[i].append(int(nxt[i]))
+                feed[i] = nxt[i]
+                n_new[i] += 1
+    assert outs == out
+
+    # explicit override still wins
+    srv32 = BatchServer(model, batch_slots=2,
+                        scfg=ServeConfig(max_seq=32, cache_dtype=jnp.float32))
+    srv32.load(bf16)
+    srv32.generate(prompts, max_new=2)
+    dtypes = {a.dtype for a in jax.tree_util.tree_leaves(srv32.engine._cache)}
+    assert dtypes == {jnp.float32.dtype}
+
+
+def test_truncation_flag_at_cache_boundary():
+    """Satellite 2: a row whose prompt is long relative to max_seq gets
+    fewer than max_new tokens — previously silent, now flagged. Boundary:
+    maxlen + max_new - 1 > Smax."""
+    cfg, model, params = _tiny(n_layers=1)
+    srv = BatchServer(model, batch_slots=2, scfg=ServeConfig(max_seq=8))
+    srv.load(params)
+    outs, comps = srv.generate([[1, 2, 3, 4, 5], [1, 2]], max_new=6,
+                               with_meta=True)
+    # row 0: emits at pos 4..7 then runs out of cache depth -> 4 of 6
+    assert len(outs[0]) == 5 + 4 and comps[0].truncated
+    # row 1: emits at pos 1..6 -> full budget, no flag
+    assert len(outs[1]) == 2 + 6 and not comps[1].truncated
+    # flag is per-row: a fitting cohort-mate is never flagged by a
+    # truncating neighbour, and the flagged row's tokens match the solo
+    # prefix (truncation drops the tail, never corrupts the head)
+    _solo.params = params
+    assert outs[1] == _solo(model, [1, 2], 6, max_seq=8)
+
+
+def test_scheduler_hysteresis_no_thrash():
+    """Satellite 3a: a live/slot ratio hovering at the threshold fires the
+    scheduler exactly once; re-firing needs a further `hysteresis` drop."""
+    sched = RecompactScheduler(threshold=0.9, hysteresis=0.05)
+    assert not sched.decide(0.95)          # above threshold: never
+    assert sched.decide(0.89)              # first crossing fires
+    hover = [0.895, 0.885, 0.89, 0.887, 0.893, 0.886]
+    assert not any(sched.decide(r) for r in hover), "thrash at threshold"
+    assert sched.decide(0.83)              # a real further drop re-fires
+    assert sched.fires == 2
+    assert sched.reslot_recommended(0.4)
+    assert not sched.reslot_recommended(0.6)
+
+
+def test_scheduler_drives_engine_recompact():
+    """The engine's refresh upgrades itself to a recompact exactly when
+    the scheduler fires, and the lifecycle never retraces."""
+    cfg, model, params = _tiny()
+    params = _kill_w1_columns(params, range(96))      # 32/128 live
+    sched = RecompactScheduler(threshold=0.99, hysteresis=1 / 32)
+    eng = FleetEngine(model, 2, EngineConfig(max_seq=32), scheduler=sched)
+    eng.load_compact(params=params)
+    w1 = "blocks/p0_global/mlp/w1"
+    assert eng.compact.live[w1] == 32
+    eng.submit([1, 2, 3], 4)
+    eng.drain()
+    assert eng.n_traces == 1
+
+    # one more dead column -> ratio 31/32 crosses the threshold: recompact
+    victim = int(eng.compact.sels[w1][0])
+    params2 = _kill_w1_columns(params, [victim])
+    assert eng.refresh(params2) is True
+    assert sched.fires == 1 and eng.compact.live[w1] == 31
+
+    # same checkpoint again: ratio unchanged -> plain refresh, no thrash
+    assert eng.refresh(params2) is False
+    assert sched.fires == 1
+    eng.submit([4, 5], 4)
+    eng.drain()
+    assert eng.n_traces == 1
+
+
+def test_midflight_recompact_bit_exact():
+    """Satellite 3b: recompacting between steps with requests in flight is
+    bit-exact vs pausing cohort-style — the ascending-prefix re-gather
+    keeps the surviving GEMM terms in the same order, so the solo run
+    that switches checkpoints at the same local depth matches exactly."""
+    cfg, model, params = _tiny()
+    params = _kill_w1_columns(params, range(96))
+    w1 = "blocks/p0_global/mlp/w1"
+    cm = compact_model(params, cfg.projection_specs)
+    victim = int(cm.sels[w1][0])
+    params2 = _kill_w1_columns(
+        jax.tree_util.tree_map(lambda a: a * 1.25, params), [victim])
+
+    switch_at = 3
+    eng = FleetEngine(model, 3, EngineConfig(max_seq=32))
+    eng.load_compact(params=params)
+    prompts = [[1, 2, 3], [4, 5], [8, 9, 3, 1]]
+    rids = [eng.submit(p, 6) for p in prompts]
+    for _ in range(switch_at):
+        eng.step()
+    eng.recompact(params2)
+    assert eng.compact.live[w1] == 31
+    got = {c.rid: c.tokens for c in eng.drain()}
+    assert eng.n_traces == 1, "mid-flight recompact must not retrace"
+
+    for p, r in zip(prompts, rids):
+        solo = FleetEngine(model, 1, EngineConfig(max_seq=32))
+        solo.load_compact(params=params)
+        solo.submit(p, 6)
+        for _ in range(switch_at):
+            solo.step()
+        solo.recompact(params2)
+        assert solo.drain()[0].tokens == got[r], f"rid {r} diverges"
+
+
+def test_cache_and_slots_are_donated():
+    """Tentpole no-copy argument: the compiled step aliases the cache and
+    slot-state inputs to its outputs (donation), so steady-state decode
+    performs no per-step HBM copy — the old buffers are invalidated."""
+    cfg, model, params = _tiny(n_layers=1)
+    eng = FleetEngine(model, 2, EngineConfig(max_seq=16))
+    eng.load(params)
+    assert "input_output_alias" in eng.step_hlo()
+    eng.submit([1, 2, 3], 2)
+    eng.step()
+    old_leaf = jax.tree_util.tree_leaves(eng._cache)[0]
+    eng.step()
+    assert old_leaf.is_deleted(), "cache buffer survived donation"
+    eng.flush()
+
+
+def test_cancel_evicts_and_frees_slot():
+    """cancel() retires an in-flight request (evicted=True, partial
+    tokens) and its slot is re-admitted without a retrace."""
+    cfg, model, params = _tiny(n_layers=1)
+    _solo.params = params
+    eng = FleetEngine(model, 1, EngineConfig(max_seq=32))
+    eng.load(params)
+    r0 = eng.submit([1, 2, 3], 8)
+    r1 = eng.submit([4, 5], 3)          # queued behind the only slot
+    for _ in range(4):
+        eng.step()
+    assert eng.cancel(r0)
+    comps = {c.rid: c for c in eng.drain()}
+    assert comps[r0].evicted and len(comps[r0].generated) < 8
+    assert not comps[r1].evicted and len(comps[r1].generated) == 3
+    assert comps[r1].tokens == _solo(model, [4, 5], 3)
+    assert eng.n_traces == 1
+    assert not eng.cancel(r1)           # already finished
+
+
+def test_latency_stats_and_report():
+    """LatencyStats percentiles and the engine's latency_report shape."""
+    s = LatencyStats.from_samples([0.1, 0.2, 0.3])
+    assert s.count == 3 and abs(s.p50 - 0.2) < 1e-12
+    assert LatencyStats.from_samples([]).count == 0
+    cfg, model, params = _tiny(n_layers=1)
+    eng = FleetEngine(model, 2, EngineConfig(max_seq=16))
+    eng.load(params)
+    eng.submit([1, 2], 3)
+    eng.drain()
+    rep = eng.latency_report()
+    assert rep["ttft"]["count"] == 1
+    assert rep["per_token"]["count"] == 2      # 3 tokens -> 2 gaps
+    assert rep["ttft"]["p50"] > 0
+
+
+def test_submit_validation():
+    """Prompt length and budget validation fail loudly at submit."""
+    cfg, model, params = _tiny(n_layers=1)
+    eng = FleetEngine(model, 1, EngineConfig(max_seq=8))
+    eng.load(params)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit([], 4)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(list(range(9)), 4)
+    with pytest.raises(ValueError, match="max_new"):
+        eng.submit([1], 0)

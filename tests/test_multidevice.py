@@ -650,13 +650,11 @@ def test_sharded_zoo_serve_matches_single_device():
         got = srv.generate(prompts, max_new=6)
         assert got == want, (got, want)
 
-        cache = init_cache(cfg, 8, 32, jnp.float32)
-        hlo = srv._step.lower(srv.params, cache,
-                              jnp.zeros((8, 1), jnp.int32),
-                              jnp.asarray(0)).compile().as_text()
+        hlo = srv.engine.step_hlo()
         for op in ("all-gather", "all-reduce", "all-to-all",
                    "collective-permute"):
             assert not re.search(op, hlo), op
+        assert "input_output_alias" in hlo   # donated cache + slot state
         print("OK")
     """)
     assert "OK" in out
