@@ -285,15 +285,21 @@ def engine_report(quick: bool = True,
 
 def families_report(quick: bool = True,
                     out_path: str = "BENCH_families.json") -> List[Row]:
-    """Per-constraint-family sweep (PR 4): plain vs weighted vs bilevel at
-    the three sparsity regimes, plus the mixed-family packed contract (one
-    engine launch per family sub-buffer). Writes ``out_path`` for CI;
-    ``scripts/check.sh --bench-smoke`` gates bilevel <= 1.0x plain at the
-    high-sparsity regime (the bi-level operator drops the per-column sort,
-    so its solve must never be slower where columns die in droves).
+    """Per-constraint-family sweep (PR 4, extended in PR 10): plain vs
+    weighted vs bilevel vs l1,2 at the three sparsity regimes, a Hoyer
+    per-leaf timing row, the mixed-family packed contract (one engine
+    launch per family sub-buffer), and the fused-vs-unfused l1,2 projected
+    step (the scale-mode two-pass fold, DESIGN.md §14). Writes ``out_path``
+    for CI; ``scripts/check.sh --bench-smoke`` gates bilevel <= 1.0x and
+    l1,2 <= 1.0x plain at the high-sparsity regime (both solves are
+    sort-free, so they must never lose to the exact solver where columns
+    die in droves) and the fused l1,2 step <= 0.85x its unfused twin.
     """
-    from repro.core import (project_bilevel, project_l1inf_weighted,
+    from repro.core import (hoyer_sparseness, project_bilevel, project_hoyer,
+                            project_l1inf_weighted, project_l12_newton,
                             ProjectionEngine)
+    from repro.optim.adam import AdamConfig, adam_init
+    from .fused_step_bench import _time_pair
 
     rng = np.random.default_rng(17)
     reps = 30 if quick else 80
@@ -305,10 +311,12 @@ def families_report(quick: bool = True,
     Y = jnp.asarray(rng.uniform(0, 1, size=(n, m)) * scale, jnp.float32)
     w = jnp.asarray(np.exp(0.3 * rng.normal(size=(m,))), jnp.float32)
     norm = float(np.abs(np.asarray(Y)).max(axis=0).sum())
+    norm_l12 = float(np.linalg.norm(np.asarray(Y), axis=0).sum())
 
     regimes = []
     for C_frac in (0.5, 0.1, 0.01):
         C = C_frac * norm
+        C12 = C_frac * norm_l12
         plain_us = _time_call(
             lambda: project_l1inf_newton(Y, C).block_until_ready(), reps)
         weighted_us = _time_call(
@@ -316,25 +324,44 @@ def families_report(quick: bool = True,
             reps)
         bilevel_us = _time_call(
             lambda: project_bilevel(Y, C).block_until_ready(), reps)
+        l12_us = _time_call(
+            lambda: project_l12_newton(Y, C12).block_until_ready(), reps)
         colsp_plain = _sparsity(project_l1inf_newton(Y, C))
         colsp_weighted = _sparsity(project_l1inf_weighted(Y, w, C))
         colsp_bi = _sparsity(project_bilevel(Y, C))
+        colsp_l12 = _sparsity(project_l12_newton(Y, C12))
         regimes.append({
             "C_frac": C_frac,
             "colsp_plain_pct": colsp_plain,
             "colsp_weighted_pct": colsp_weighted,
             "colsp_bilevel_pct": colsp_bi,
+            "colsp_l12_pct": colsp_l12,
             "plain_us": plain_us, "weighted_us": weighted_us,
-            "bilevel_us": bilevel_us,
+            "bilevel_us": bilevel_us, "l12_us": l12_us,
             "ratio_bilevel_vs_plain": bilevel_us / plain_us,
             "ratio_weighted_vs_plain": weighted_us / plain_us,
+            "ratio_l12_vs_plain": l12_us / plain_us,
         })
         for fam, us, sp in (("plain", plain_us, colsp_plain),
                             ("weighted", weighted_us, colsp_weighted),
-                            ("bilevel", bilevel_us, colsp_bi)):
+                            ("bilevel", bilevel_us, colsp_bi),
+                            ("l12", l12_us, colsp_l12)):
             rows.append((f"families/{fam}@{n}x{m}", us,
                          f"C_frac={C_frac};colsp={sp:.1f}%"))
     payload["regimes"] = regimes
+
+    # ---- Hoyer (per-leaf only, DESIGN.md §14): no packed/ratio gate, a
+    # timing row keeps the alternating solve's cost visible in CI history
+    hoyer_s = 0.75
+    hoyer_us = _time_call(
+        lambda: project_hoyer(Y, hoyer_s).block_until_ready(), reps)
+    Xh = project_hoyer(Y, hoyer_s)
+    payload["hoyer"] = {
+        "s": hoyer_s, "us": hoyer_us,
+        "min_sigma": float(jnp.min(hoyer_sparseness(Xh))),
+    }
+    rows.append((f"families/hoyer@{n}x{m}", hoyer_us,
+                 f"s={hoyer_s};min_sigma={payload['hoyer']['min_sigma']:.3f}"))
 
     # ---- mixed-family packed contract: one launch per family sub-buffer --
     params = {
@@ -368,6 +395,58 @@ def families_report(quick: bool = True,
     rows.append(("families/mixed_packed", mixed_us,
                  f"launches={len(payload['mixed']['launches'])};"
                  f"max_diff={max_diff:.2e}"))
+
+    # ---- fused l1,2 projected step: scale-mode two-pass fold vs the
+    # unfused adam -> pack -> solve -> unpack step on the same SAE-shaped
+    # pair (encoder leaf + axis=1 stack, where the packer's physical
+    # transpose hurts most). Same interleaved-timing methodology as
+    # BENCH_fused_step.json; check.sh gates ratio <= 0.85.
+    fn_, fm_, lead = (256, 1024, 2) if quick else (512, 2048, 4)
+    freps = 15 if quick else 20
+    key = jax.random.PRNGKey(7)
+    fparams = {
+        "enc1": {"w": jax.random.normal(jax.random.fold_in(key, 0),
+                                        (fn_, fm_))},
+        "blocks": {"w": jax.random.normal(jax.random.fold_in(key, 1),
+                                          (lead, fn_, fm_))},
+    }
+    fgrads = jax.tree_util.tree_map(
+        lambda p: 0.01 * jax.random.normal(jax.random.fold_in(key, 2),
+                                           p.shape), fparams)
+    acfg = AdamConfig(lr=1e-3)
+    fC = 0.1 * float(jnp.linalg.norm(fparams["enc1"]["w"], axis=0).sum())
+    fspecs = (ProjectionSpec(pattern=r"enc1/w", norm="l12", radius=fC),
+              ProjectionSpec(pattern=r"blocks/w", norm="l12", radius=fC,
+                             axis=1))
+    fout = {}
+    for solver in ("newton", "fused"):
+        feng = ProjectionEngine(fspecs, solver=solver)
+        opt = adam_init(fparams, acfg)
+        fst = feng.init_state(fparams)
+        fstep = jax.jit(lambda g, o, p, s, e=feng: e.projected_update(
+            g, o, p, acfg, state=s))
+        p1, o1, s1 = fstep(fgrads, opt, fparams, fst)
+        p1, o1, s1 = fstep(fgrads, o1, p1, s1)    # settle the warm start
+        jax.block_until_ready(p1)
+        fout[solver] = {
+            "call": (lambda g=fgrads, o=o1, p=p1, s=s1, f=fstep:
+                     jax.block_until_ready(f(g, o, p, s))),
+            "params": fstep(fgrads, o1, p1, s1)[0],
+        }
+    unfused_us, fused_us = _time_pair(fout["newton"]["call"],
+                                      fout["fused"]["call"], freps)
+    fused_diff = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(
+        jax.tree_util.tree_leaves(fout["newton"]["params"]),
+        jax.tree_util.tree_leaves(fout["fused"]["params"])))
+    payload["l12_fused"] = {
+        "shape": [lead, fn_, fm_], "C_frac": 0.1,
+        "unfused_us": unfused_us, "fused_us": fused_us,
+        "ratio": fused_us / unfused_us,
+        "max_abs_diff": fused_diff,
+    }
+    rows.append(("families/l12_fused_step", fused_us,
+                 f"ratio={fused_us / unfused_us:.3f};"
+                 f"max_diff={fused_diff:.2e}"))
 
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)

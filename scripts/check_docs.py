@@ -34,6 +34,8 @@ AUDITED_MODULES = [
     "src/repro/core/engine.py",
     "src/repro/core/families.py",
     "src/repro/core/constraints.py",
+    "src/repro/core/l12.py",
+    "src/repro/core/hoyer.py",
     "src/repro/dist/projection.py",
     "src/repro/sae/serve.py",
     "src/repro/serve/compact.py",

@@ -15,6 +15,11 @@ Public API:
     project_l1inf_segmented_sharded — shard_map twin (psum per iteration)
     project_bilevel          — bi-level l1,inf operator (arXiv:2407.16293),
         linear-time; project_bilevel_ref is its sort-based exact reference
+    project_l12_newton       — l1,2 (group-lasso) ball via the segmented
+        Newton on column energies (fuses: DESIGN.md §14)
+    project_hoyer            — Hoyer sparseness-ratio projection
+        (arXiv:1303.5259); project_hoyer_ref is its sorted closed form,
+        hoyer_sparseness the per-column sigma diagnostic
     ConstraintFamily / register_family / get_family / family_for_norm —
         the pluggable constraint-family registry (core.families): every
         family rides the packed / Pallas / sharded engine machinery
@@ -43,9 +48,11 @@ from .masked import project_l1inf_masked, l1inf_column_mask
 from .weighted import project_l1inf_weighted, l1inf_weighted_norm
 from .bilevel import (project_bilevel, project_bilevel_stats,
                       project_bilevel_ref, bilevel_norm)
+from .l12 import project_l12_newton, project_l12_stats
+from .hoyer import hoyer_sparseness, project_hoyer, project_hoyer_ref
 from .families import (ConstraintFamily, register_family, get_family,
                        family_for_norm, family_names, packable_norms,
-                       project_segmented_family,
+                       registered_norms, project_segmented_family,
                        project_segmented_family_sharded)
 from .constraints import (ProjectionSpec, apply_constraints,
                           build_packed_plans, column_masks, apply_masks,

@@ -39,20 +39,21 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .families import family_for_norm, get_family, packable_norms
-from .norms import project_l1_ball, project_l12_ball
+from .families import family_for_norm, get_family, registered_norms
+from .norms import project_l1_ball
 
 __all__ = ["ProjectionSpec", "apply_constraints", "build_packed_plans",
            "column_masks", "apply_masks", "sparsity_report", "leaf_path_str",
            "engine_count", "engine_counters", "engine_counters_reset"]
 
-# spec norms: every registered constraint family's norms (which pack into
-# per-family sub-buffers) plus the per-leaf-only balls
-_EXTRA_NORMS = {"l1", "l12"}
+# spec norms: every registered constraint family's norms (packable families
+# pack into per-family sub-buffers; seg_ops=None families like hoyer route
+# per-leaf) plus the hand-wired per-leaf-only l1 ball
+_EXTRA_NORMS = {"l1"}
 
 
 def _known_norms():
-    return packable_norms() | _EXTRA_NORMS
+    return registered_norms() | _EXTRA_NORMS
 _LANE = 128   # TPU lane width: per-matrix column padding unit
 _SUBLANE = 8  # TPU sublane: packed-buffer row padding unit
 
@@ -108,8 +109,9 @@ class ProjectionSpec:
 
     pattern:  regex matched against the '/'-joined param path.
     norm:     a registered constraint-family norm (l1inf | l1inf_sorted |
-              l1inf_weighted | l1inf_masked | bilevel — see
-              ``core.families``) or a per-leaf-only ball (l1 | l12).
+              l1inf_weighted | l1inf_masked | bilevel | l12 | hoyer — see
+              ``core.families``; hoyer's radius is the target sparseness
+              ratio s in (0, 1]) or the per-leaf-only l1 ball.
     radius:   ball radius C (> 0).
     axis:     the *max* axis of the trailing 2-D slice (paper: 0 — columns
               are prunable structures along the other axis).
@@ -170,16 +172,15 @@ def leaf_path_str(path) -> str:
 def _project_fn(spec: "ProjectionSpec") -> Callable:
     """Per-leaf projection (x_2d, C, axis) -> x_2d for one spec.
 
-    Family norms dispatch through the registry (``l1inf_sorted`` keeps the
-    total-order solver on this path); l1/l12 stay hand-wired.
+    Family norms — l12 and hoyer included — dispatch through the registry
+    (``l1inf_sorted`` keeps the total-order solver on this path); only the
+    flat l1 ball stays hand-wired.
     """
     if spec.norm == "l1inf_sorted":
         from .l1inf import project_l1inf_sorted
         return lambda x, C, axis: project_l1inf_sorted(x, C, axis=axis)
     if spec.norm == "l1":
         return lambda x, C, axis: project_l1_ball(x, C)
-    if spec.norm == "l12":
-        return lambda x, C, axis: project_l12_ball(x, C, axis=axis)
     fam = family_for_norm(spec.norm)
     w = spec.weights
 
@@ -236,7 +237,7 @@ def apply_constraints(params: Any, specs: Sequence[ProjectionSpec],
     ``every_k`` gating. Returns the projected pytree, same structure/
     dtypes. jit-safe (cond on step % every_k). The packed fast path is
     ``apply_constraints_packed``; this per-leaf form stays as the simple
-    reference used by tests and the l1/l12 norms.
+    reference used by tests and the per-leaf-only norms (l1, hoyer).
 
     >>> params = apply_constraints(params, (spec,))
     """
@@ -359,7 +360,7 @@ class PackedPlan:
 def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
     """Split the leaves into packed plans — one per (constraint family,
     every_k) pair — and a per-leaf remainder [(leaf_index, spec)] for the
-    unpackable balls (l1, l12).
+    unpackable balls (the l1 ball and seg_ops-less families like hoyer).
 
     ``params``: pytree of arrays or ShapeDtypeStructs (shapes are all that
     is read); ``specs``: ProjectionSpec sequence. Returns
@@ -377,7 +378,7 @@ def build_packed_plans(params: Any, specs: Sequence[ProjectionSpec]):
         if spec is None:
             continue
         fam = family_for_norm(spec.norm)
-        if fam is not None:
+        if fam is not None and fam.seg_ops is not None:
             groups.setdefault((fam.name, spec.every_k), []).append(
                 (i, leaf, spec))
         else:

@@ -150,7 +150,8 @@ class ProjectionEngine:
         pair and each sub-buffer is projected by a single solve of the
         configured solver — a mixed-family spec list (plain + weighted +
         bilevel, same every_k) costs one engine invocation per family;
-        unpackable norms (l1, l12) fall back to the per-leaf path. ``state`` threads the
+        unpackable norms (the l1 ball and per-leaf-only families like
+        hoyer) fall back to the per-leaf path. ``state`` threads the
         per-plan theta vectors (Newton warm start) between train steps —
         pass the dict from ``init_state`` (or a previous call) and reuse
         the returned dict. ``step`` gates ``every_k > 1`` specs.
@@ -319,6 +320,8 @@ class ProjectionEngine:
                 new_state[plan.key] = theta
                 stats[plan.key] = iters
                 continue
+            stat = getattr(fam.seg_ops, "colstats_stat", "abs")
+            mode = getattr(fam.seg_ops, "fused_mode", "clip")
             sums, maxes = [], []
             # pass 1: one read of (grad, mu, nu, param) per leaf -> moments
             # written, O(m) statistics out, the updated values never stored
@@ -327,7 +330,8 @@ class ProjectionEngine:
                 new_m[i], new_v[i], cs, cm = fused_adam_colstats(
                     g_leaves[i], m_leaves[i], v_leaves[i], p_leaves[i],
                     cfg=acfg, lr_t=lr_t, b1c=b1c, b2c=b2c,
-                    scale=scale, mask=mk_leaves[i], transpose=e.transpose)
+                    scale=scale, mask=mk_leaves[i], transpose=e.transpose,
+                    stat=stat)
                 sums.append(cs.reshape(-1))
                 maxes.append(cm.reshape(-1))
             colsum = jnp.concatenate(sums) if len(sums) > 1 else sums[0]
@@ -340,14 +344,23 @@ class ProjectionEngine:
             mu, theta, iters, inside_seg, zero_seg = _segmented_newton(
                 aux, sids, C_seg, plan.num_segments, theta0, 32,
                 ops=fam.seg_ops)
-            # fold the identity/zero segment gating into the clip level so
-            # pass 2 is a single min() — no virtual columns are padding, so
-            # the segment lookups need no sentinel extension
-            mu_eff = jnp.where(zero_seg[sids], 0.0,
-                               jnp.where(inside_seg[sids], _MU_INF, mu))
+            # fold the identity/zero segment gating into the per-column
+            # level so pass 2 is a single min()/multiply — no virtual
+            # columns are padding, so the lookups need no sentinel
+            # extension. Clip families gate with the 1e30 clip sentinel;
+            # scale families (l1,2) turn mu into the column multiplier via
+            # fused_scale and gate with the 1.0 identity multiplier.
+            if mode == "scale":
+                lvl = fam.seg_ops.fused_scale(aux, mu)
+                mu_eff = jnp.where(zero_seg[sids], 0.0,
+                                   jnp.where(inside_seg[sids], 1.0, lvl))
+            else:
+                mu_eff = jnp.where(zero_seg[sids], 0.0,
+                                   jnp.where(inside_seg[sids], _MU_INF, mu))
             off = 0
             # pass 2: recompute the update from the just-written moments,
-            # clip at mu, write the params — the step's only param write
+            # clip/scale at mu, write the params — the step's only param
+            # write
             for e in plan.entries:
                 span = e.lead * e.m
                 mu_leaf = mu_eff[off:off + span].reshape(e.lead, e.m)
@@ -356,7 +369,7 @@ class ProjectionEngine:
                 new_p[i] = fused_adam_clip_apply(
                     new_m[i], new_v[i], p_leaves[i], mu_leaf,
                     cfg=acfg, lr_t=lr_t, b1c=b1c, b2c=b2c,
-                    mask=mk_leaves[i], transpose=e.transpose)
+                    mask=mk_leaves[i], transpose=e.transpose, mode=mode)
             new_state[plan.key] = theta
             stats[plan.key] = iters
 

@@ -17,10 +17,16 @@ A family declares (DESIGN.md §8):
                        OPTIONAL ``from_colstats(colsum, colmax, w)`` — aux
                        from streaming per-column sum/max statistics, which
                        is what qualifies a family for the fused two-pass
-                       train step of ``kernels/fused_step``, DESIGN.md §11).
-                       Because every hook is per-column given the shared
-                       theta, the SAME ops power the local, packed, and
-                       sharded solves;
+                       train step of ``kernels/fused_step``, DESIGN.md §11;
+                       seg_ops with ``colstats_stat``/``fused_mode`` attrs
+                       steer what pass 1 accumulates and how pass 2 writes
+                       — the l1,2 family streams sum-of-squares and scales
+                       instead of clipping, DESIGN.md §14). ``seg_ops=None``
+                       marks a family as NOT packable (no shared per-segment
+                       threshold exists — e.g. ``hoyer``): its specs stay on
+                       the per-leaf path under every solver. Because every
+                       hook is per-column given the shared theta, the SAME
+                       ops power the local, packed, and sharded solves;
   * ``norm_fn``      — the constraint norm (feasibility test);
   * ``project_leaf`` — the per-matrix projection (per-leaf fallback path);
   * ``reference``    — an independent exact reference (tests/benches);
@@ -28,12 +34,21 @@ A family declares (DESIGN.md §8):
                        solver (None -> the packed Newton path is used even
                        when the engine is configured for Pallas);
   * ``uses_weights`` — whether ``ProjectionSpec.weights`` feeds a packed
-                       per-column weight vector into the solve.
+                       per-column weight vector into the solve;
+  * ``feasible``     — optional ``(Y, C, axis, w) -> bool`` feasibility
+                       test for families whose constraint is NOT of the
+                       form norm(Y) <= C (``hoyer``: every column's
+                       sparseness RATIO must sit above the radius). When
+                       None the conformance harness derives feasibility
+                       from ``norm_fn``.
 
 Registered families: ``l1inf`` (plain, also serving ``l1inf_sorted``
 specs), ``l1inf_weighted`` (Perez et al. 2022-style column weights),
-``l1inf_masked`` (paper Eq. 20 — plain support, unclipped magnitudes), and
-``bilevel`` (arXiv:2407.16293 — Eq. (19) restricted to k = 1, linear time).
+``l1inf_masked`` (paper Eq. 20 — plain support, unclipped magnitudes),
+``bilevel`` (arXiv:2407.16293 — Eq. (19) restricted to k = 1, linear
+time), ``l12`` (group lasso on column energies, DESIGN.md §14 — the
+retired ``norms.py::project_l12_ball`` is its reference), and ``hoyer``
+(Thom & Palm arXiv:1303.5259 sparseness ratio — per-leaf only).
 
 Warm-start semantics are family-uniform: each packed plan threads one
 theta per segment; any theta0 >= 0 is repaired by the bootstrap step, so
@@ -57,6 +72,9 @@ from .weighted import (_WeightedSegOps, l1inf_weighted_norm,
                        project_l1inf_weighted)
 from .masked import _MaskedSegOps, project_l1inf_masked
 from .bilevel import _BilevelSegOps, project_bilevel, project_bilevel_ref
+from .l12 import _L12SegOps, project_l12_newton
+from .norms import l12_norm, project_l12_ball
+from .hoyer import hoyer_sparseness, project_hoyer, project_hoyer_ref
 
 __all__ = [
     "ConstraintFamily",
@@ -65,6 +83,7 @@ __all__ = [
     "family_for_norm",
     "family_names",
     "packable_norms",
+    "registered_norms",
     "project_segmented_family",
     "project_segmented_family_sharded",
 ]
@@ -76,10 +95,12 @@ class ConstraintFamily:
 
     Frozen record: ``norms`` (the ProjectionSpec.norm strings served),
     ``seg_ops`` (the per-column segmented-Newton hooks — the
-    ``core.l1inf._PlainSegOps`` contract, DESIGN.md §8), ``norm_fn``
-    ``(Y, axis, w) -> scalar``, ``project_leaf``/``reference``
-    ``(Y, C, axis, w) -> X`` on (n, m) f32/bf16 matrices, an optional
-    ``pallas_loader`` for the fused packed kernel, and ``uses_weights``.
+    ``core.l1inf._PlainSegOps`` contract, DESIGN.md §8 — or None for
+    per-leaf-only families), ``norm_fn`` ``(Y, axis, w) -> scalar``,
+    ``project_leaf``/``reference`` ``(Y, C, axis, w) -> X`` on (n, m)
+    f32/bf16 matrices, an optional ``pallas_loader`` for the fused packed
+    kernel, ``uses_weights``, and an optional ``feasible``
+    ``(Y, C, axis, w) -> bool`` for non-norm-ball constraints.
 
     >>> fam = ConstraintFamily(name="l1inf", norms=("l1inf",), seg_ops=ops,
     ...                        norm_fn=nf, project_leaf=pl, reference=ref)
@@ -92,6 +113,7 @@ class ConstraintFamily:
     reference: Callable              # (Y, C, axis, w) -> X (independent)
     pallas_loader: Optional[Callable] = None
     uses_weights: bool = False
+    feasible: Optional[Callable] = None   # (Y, C, axis, w) -> bool
 
 
 _REGISTRY: Dict[str, ConstraintFamily] = {}
@@ -138,10 +160,13 @@ def get_family(name: str) -> ConstraintFamily:
 
 
 def family_for_norm(norm: str) -> Optional[ConstraintFamily]:
-    """The family serving a spec norm, or None (l1/l12 stay per-leaf).
+    """The family serving a spec norm, or None (the hand-wired ``l1`` ball
+    is the only norm without a family).
 
     ``norm``: a ``ProjectionSpec.norm`` string. One family may serve
-    several norms (``l1inf`` also serves ``l1inf_sorted``).
+    several norms (``l1inf`` also serves ``l1inf_sorted``). A returned
+    family with ``seg_ops is None`` (``hoyer``) is registered but NOT
+    packable — its specs route per-leaf.
 
     >>> family_for_norm("l1inf_masked").name   # 'l1inf_masked'
     """
@@ -158,10 +183,23 @@ def family_names() -> Tuple[str, ...]:
 
 
 def packable_norms() -> frozenset:
-    """Every spec norm that packs into a family sub-buffer (the complement,
-    l1/l12, stays on the per-leaf path — see ``core.constraints``).
+    """Every spec norm that packs into a family sub-buffer: the norms of
+    families WITH seg_ops. The complement (``l1``, and registered
+    per-leaf-only families like ``hoyer``) stays on the per-leaf path —
+    see ``core.constraints``.
 
     >>> "bilevel" in packable_norms()   # True
+
+    """
+    return frozenset(n for n, f in _NORM_TO_FAMILY.items()
+                     if _REGISTRY[f].seg_ops is not None)
+
+
+def registered_norms() -> frozenset:
+    """Every spec norm any registered family serves, packable or not
+    (superset of ``packable_norms`` — includes ``hoyer``).
+
+    >>> "hoyer" in registered_norms()   # True
     """
     return frozenset(_NORM_TO_FAMILY)
 
@@ -191,6 +229,8 @@ def project_segmented_family(Y: jnp.ndarray, seg_ids: jnp.ndarray, C_seg, *,
     >>> X, theta, iters = project_segmented_family(Y, sids, C, num_segments=3)
     """
     fam = get_family(family)
+    if fam.seg_ops is None:
+        raise ValueError(f"family {family!r} is per-leaf only (seg_ops=None)")
     return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
                             max_iter, ops=fam.seg_ops,
                             w_col=w_col if fam.uses_weights else None)
@@ -217,6 +257,8 @@ def project_segmented_family_sharded(Y: jnp.ndarray, seg_ids: jnp.ndarray,
     ...     num_segments=3, axis_names=("data",))
     """
     fam = get_family(family)
+    if fam.seg_ops is None:
+        raise ValueError(f"family {family!r} is per-leaf only (seg_ops=None)")
     return _segmented_solve(Y, seg_ids, C_seg, num_segments, theta0,
                             max_iter, axis_names=tuple(axis_names),
                             contrib=contrib, ops=fam.seg_ops,
@@ -286,4 +328,44 @@ register_family(ConstraintFamily(
     reference=lambda Y, C, axis=0, w=None:
         project_bilevel_ref(Y, C, axis=axis),
     pallas_loader=_load_bilevel_pallas,
+))
+
+# l1,2 / group lasso (DESIGN.md §14): column energies replace column
+# maxima, finalize scales instead of clips. Both per-leaf slots are the
+# retired ``norms.py::project_l12_ball`` sort-based closed form, so
+# pre-registry ``norm="l12"`` specs are bit-unchanged on the per-leaf
+# path; the packed/fused solves run the Newton on energies and are
+# checked against this reference. No pallas_loader: solver="pallas"
+# falls back to the packed Newton (documented engine behavior).
+register_family(ConstraintFamily(
+    name="l12",
+    norms=("l12",),
+    seg_ops=_L12SegOps,
+    norm_fn=lambda Y, axis=0, w=None: l12_norm(Y, axis=axis),
+    project_leaf=lambda Y, C, axis=0, w=None:
+        project_l12_ball(Y, C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None:
+        project_l12_ball(Y, C, axis=axis),
+))
+
+# Hoyer sparseness ratio (arXiv:1303.5259, DESIGN.md §14): seg_ops=None —
+# the constraint has no shared per-segment threshold and the row count
+# enters it through k(n, s), so zero-row packing would CHANGE the
+# constraint; specs route per-leaf under every solver. The radius is the
+# target sparseness s in (0, 1]; the constraint direction is inverted
+# (sparser = MORE feasible), so ``feasible`` — min column sparseness >= s
+# — is the authoritative test, and ``norm_fn`` reports that min ratio
+# (NOT a norm; kept for reporting only).
+register_family(ConstraintFamily(
+    name="hoyer",
+    norms=("hoyer",),
+    seg_ops=None,
+    norm_fn=lambda Y, axis=0, w=None:
+        jnp.min(hoyer_sparseness(Y, axis=axis)),
+    project_leaf=lambda Y, C, axis=0, w=None:
+        project_hoyer(Y, C, axis=axis),
+    reference=lambda Y, C, axis=0, w=None:
+        project_hoyer_ref(Y, C, axis=axis),
+    feasible=lambda Y, C, axis=0, w=None:
+        jnp.min(hoyer_sparseness(Y, axis=axis)) >= C - 1e-5,
 ))

@@ -1,0 +1,221 @@
+"""Hoyer l1/l2 sparseness-ratio projection (Thom & Palm, arXiv:1303.5259).
+
+The Hoyer sparseness of a nonzero vector y in R^n is
+
+    sigma(y) = (sqrt(n) - ||y||_1 / ||y||_2) / (sqrt(n) - 1)   in [0, 1]
+
+— 1 for a 1-sparse vector, 0 for a flat one, and invariant to scale. The
+constraint set {sigma(y_j) >= s for every column j} is the normalized
+sparsity target the radius-based families cannot express (halving C halves
+the ball, but sigma is unchanged by scaling): popular in the GSP line of
+work (``/root/related/riohib__GSP``; SNIPPETS.md's ``sparse_opt``
+exemplar is its sorted closed form).
+
+sigma(y) >= s is equivalent to ||y||_1 <= k ||y||_2 with
+
+    k = sqrt(n) - s (sqrt(n) - 1)   in [1, sqrt(n)],
+
+so the projection preserves each column's energy L2 = ||y||_2, targets
+L1 = k L2, and projects b = |y| onto the (nonconvex) sphere-simplex
+intersection {z >= 0 : sum z = L1, ||z||_2 = L2}, restoring signs after.
+Infeasible columns shrink their small entries to zero; feasible and zero
+columns pass through untouched.
+
+Two solvers, per the family contract (``core.families``):
+
+  * ``project_hoyer``     — Hoyer's 2004 alternating projection
+    (hyperplane -> sphere-through-midpoint -> zero negatives, repeat;
+    each round fixes at least one entry at zero, so <= n rounds),
+    vectorized over columns under one ``lax.while_loop``;
+  * ``project_hoyer_ref`` — the exact closed form: on the descending-
+    sorted column the optimum is z = c1 b + c2 on a top-p active set with
+    c1 = sqrt((L2^2 - L1^2/p) / (Q_p - S_p^2/p)), c2 = (L1 - c1 S_p)/p;
+    scan every p via cumulative sums, keep the feasible candidates
+    (p >= k^2, positive smallest active entry), pick the one of minimal
+    distance to b.
+
+Why this family is NOT packable/fusable (DESIGN.md §14): there is no
+shared per-segment threshold — each column solves its own 1-D problem in
+which the row count n enters the constraint itself through k(n, s), so
+zero-row padding CHANGES the constraint (padding rows raise sqrt(n) and
+could even receive mass), and the per-column solve needs the sorted
+column, not a streaming statistic. The family registers with
+``seg_ops=None``: every solver setting routes its specs through the
+per-leaf path (``core.constraints``), which is the explicit fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .l1inf import _prep, _post
+
+__all__ = [
+    "hoyer_sparseness",
+    "project_hoyer",
+    "project_hoyer_ref",
+]
+
+_FEAS_RTOL = 1e-6   # relative slack on the l1 <= k l2 feasibility test
+
+
+def hoyer_sparseness(Y: jnp.ndarray, axis: int = 0) -> jnp.ndarray:
+    """Per-column Hoyer sparseness sigma in [0, 1] along ``axis``.
+
+    ``Y``: any float array (the reduction runs in f32+). Zero columns and
+    n = 1 columns are defined as maximally sparse (sigma = 1) — both are
+    feasible for every target s, matching the projection's identity
+    behavior there.
+
+    >>> sig = hoyer_sparseness(Y)        # (m,) f32, 1 = one-hot columns
+    """
+    dt = jnp.promote_types(Y.dtype, jnp.float32)
+    Yf = jnp.asarray(Y, dt)
+    n = Yf.shape[axis]
+    l1 = jnp.sum(jnp.abs(Yf), axis=axis)
+    l2 = jnp.sqrt(jnp.sum(Yf * Yf, axis=axis))
+    if n == 1:
+        return jnp.ones_like(l1)
+    rn = jnp.sqrt(jnp.asarray(n, dt))
+    sig = (rn - l1 / jnp.maximum(l2, jnp.finfo(dt).tiny)) / (rn - 1.0)
+    return jnp.where(l2 > 0, sig, jnp.ones_like(sig))
+
+
+def _hoyer_targets(b, s, n, dt):
+    """(feasible mask, L1 target, L2 target, k) for the |.| columns ``b``."""
+    l1 = jnp.sum(b, axis=0)
+    l2 = jnp.sqrt(jnp.sum(b * b, axis=0))
+    rn = jnp.sqrt(jnp.asarray(n, dt))
+    k = jnp.clip(rn - jnp.asarray(s, dt) * (rn - 1.0), 1.0, rn)
+    feas = jnp.logical_or(l1 <= k * l2 * (1.0 + _FEAS_RTOL), l2 == 0)
+    return feas, k * l2, l2, k
+
+
+def _alternating_cols(b, L1, L2, n):
+    """Hoyer's alternating projection, all columns at once. ``b`` (n, m)
+    nonneg; ``L1``/``L2`` (m,) targets. Returns z (n, m) >= 0 with
+    sum z = L1 and ||z||_2 = L2 per column (up to fp; exact ties of every
+    active entry settle on the hyperplane midpoint)."""
+    dt = b.dtype
+    tiny = jnp.finfo(dt).tiny
+    m = b.shape[1]
+    z0 = b + (L1 - jnp.sum(b, axis=0))[None, :] / n
+    active0 = jnp.ones(b.shape, bool)
+    done0 = jnp.zeros((m,), bool)
+
+    def cond(carry):
+        i, _, _, done = carry
+        return jnp.logical_and(i < n + 2, jnp.logical_not(jnp.all(done)))
+
+    def body(carry):
+        i, z, active, done = carry
+        p = jnp.sum(active.astype(dt), axis=0)
+        mid = jnp.where(active, (L1 / jnp.maximum(p, 1.0))[None, :], 0.0)
+        d = z - mid
+        A = jnp.sum(d * d, axis=0)
+        B = jnp.sum(mid * d, axis=0)
+        Cq = jnp.sum(mid * mid, axis=0) - L2 * L2
+        disc = jnp.maximum(B * B - A * Cq, 0.0)
+        alpha = (-B + jnp.sqrt(disc)) / jnp.maximum(A, tiny)
+        zs = mid + alpha[None, :] * d        # on the sphere AND the plane
+        colneg = jnp.any(jnp.logical_and(zs < 0, active), axis=0)
+        # zero the negatives, fix them, re-project onto the hyperplane
+        act2 = jnp.logical_and(active, zs >= 0)
+        zc = jnp.maximum(zs, 0.0)
+        p2 = jnp.sum(act2.astype(dt), axis=0)
+        corr = (L1 - jnp.sum(zc, axis=0)) / jnp.maximum(p2, 1.0)
+        zn = jnp.where(act2, zc + corr[None, :], 0.0)
+        upd = jnp.logical_not(done)
+        z_next = jnp.where(upd[None, :],
+                           jnp.where(colneg[None, :], zn, zs), z)
+        active_next = jnp.where(upd[None, :],
+                                jnp.where(colneg[None, :], act2, active),
+                                active)
+        done_next = jnp.logical_or(
+            done, jnp.logical_and(upd, jnp.logical_not(colneg)))
+        return i + 1, z_next, active_next, done_next
+
+    _, z, _, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), z0, active0, done0))
+    return jnp.maximum(z, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def project_hoyer(Y: jnp.ndarray, s, axis: int = 0) -> jnp.ndarray:
+    """Project each column of Y to Hoyer sparseness >= s (energy kept).
+
+    ``Y``: (n, m) float matrix (``axis`` selects the within-column dim,
+    like the other families' max axis); ``s``: target sparseness in
+    (0, 1]. Each column keeps its l2 energy and sign pattern; columns
+    already at sigma >= s (and zero columns) are untouched — the operator
+    is idempotent. Alternating-projection solve (<= n rounds, jit-safe,
+    vmappable for stacked leaves).
+
+    >>> X = project_hoyer(Y, 0.9)        # every column now >= 0.9 sparse
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    n, m = Yt.shape
+    b = jnp.abs(Yt)
+    feas, L1, L2, _ = _hoyer_targets(b, s, n, dt)
+    z = _alternating_cols(b, L1, L2, n)
+    X = jnp.sign(Yt) * z
+    X = jnp.where(feas[None, :], Yt, X)
+    return _post(X, Y, transpose)
+
+
+@functools.partial(jax.jit, static_argnames=("axis",))
+def project_hoyer_ref(Y: jnp.ndarray, s, axis: int = 0) -> jnp.ndarray:
+    """Exact closed-form reference of ``project_hoyer`` (tests/benches).
+
+    Sorts each column, scans every active-set size p via cumulative sums
+    (the ``sparse_opt`` construction: z = c1 b + c2 on the top p entries
+    with the two Lagrange multipliers in closed form), keeps the feasible
+    candidates and picks the one of minimal distance to |y|. O(nm log n);
+    the alternating solve must match it to fp tolerance on inputs without
+    exact ties.
+
+    >>> X = project_hoyer_ref(Y, 0.9)
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    n, m = Yt.shape
+    tiny = jnp.finfo(dt).tiny
+    b = jnp.abs(Yt)
+    feas, L1, L2, k = _hoyer_targets(b, s, n, dt)
+
+    bs = jnp.sort(b, axis=0)[::-1]                 # descending per column
+    order = jnp.argsort(-b, axis=0)
+    inv = jnp.argsort(order, axis=0)
+    S = jnp.cumsum(bs, axis=0)                     # S_p at row p-1
+    Q = jnp.cumsum(bs * bs, axis=0)
+    p = jnp.arange(1, n + 1, dtype=dt)[:, None]
+
+    num = (L2 * L2)[None, :] - (L1 * L1)[None, :] / p
+    var = Q - S * S / p
+    c1 = jnp.sqrt(jnp.maximum(num, 0.0) / jnp.maximum(var, tiny))
+    c2 = (L1[None, :] - c1 * S) / p
+    z_small = c1 * bs + c2                         # candidate's smallest entry
+    ok = (num >= 0.0) & (var > tiny) & (z_small > 0.0)
+
+    dist = ((c1 - 1.0) ** 2 * Q + 2.0 * (c1 - 1.0) * c2 * S
+            + p * c2 * c2 + (Q[-1][None, :] - Q))
+    cost = jnp.where(ok, dist, jnp.inf)
+    pbest = jnp.argmin(cost, axis=0)               # (m,) row index = p - 1
+    c1b = jnp.take_along_axis(c1, pbest[None, :], axis=0)
+    c2b = jnp.take_along_axis(c2, pbest[None, :], axis=0)
+    rows = jnp.arange(n)[:, None]
+    zs = jnp.where(rows <= pbest[None, :],
+                   jnp.maximum(c1b * bs + c2b, 0.0), 0.0)
+
+    # degenerate fallback (every active entry exactly tied: var == 0 for
+    # all p): spread L1 equally over ceil(k^2) entries
+    has = jnp.any(ok, axis=0)
+    p0 = jnp.clip(jnp.ceil(k * k), 1.0, float(n))
+    zs_fb = jnp.where(rows < p0, (L1 / p0)[None, :], 0.0)
+    zs = jnp.where(has[None, :], zs, zs_fb)
+
+    z = jnp.take_along_axis(zs, inv, axis=0)
+    X = jnp.sign(Yt) * z
+    X = jnp.where(feas[None, :], Yt, X)
+    return _post(X, Y, transpose)

@@ -1,0 +1,208 @@
+"""l1,2 (group-lasso) ball as a registered constraint family.
+
+The l1,2 ball B = {X : sum_j ||x_j||_2 <= C} is the paper's group-lasso
+comparison norm (`norms.py::project_l12_ball` is the sort-based closed
+form). Its Euclidean projection factors through per-column *energies*
+exactly the way the l1,inf families factor through per-column maxima:
+
+  level 1 (columns -> energies):  nu_j = ||y_j||_2
+  level 2 (outer l1 ball):        v    = P_{B_1(C)}(nu)     (simplex thresh)
+  inner  (per-column rescale):    x_j  = y_j * v_j / nu_j
+
+Because nu >= 0, level 2 is a soft threshold v_j = (nu_j - theta)_+ with
+theta solving g(theta) = sum_j (nu_j - theta)_+ = C — the SAME piecewise-
+linear scalar equation the bi-level family solves on column maxima, so the
+whole monotone-Newton machinery applies verbatim with statistics
+
+    a_j = nu_j,  b_j = 1,  active_j <=> nu_j >= theta,  mu_j = (nu_j - theta)_+
+
+and a ``finalize`` that SCALES columns by mu_j / nu_j instead of clipping
+entries at mu_j. The iteration state is O(m); the solve is one energy
+sweep + O(m) Newton + one scale sweep.
+
+Fusability (DESIGN.md §14): the Newton aux is the column-energy vector,
+i.e. the square root of a streaming per-column sum — sum_i u_ij^2
+accumulates across row tiles exactly like the column maxima the bi-level
+family streams. ``_L12SegOps`` therefore provides ``from_colstats`` (with
+``colstats_stat = "sq"``: pass 1 of the fused step accumulates sum u^2
+instead of sum |u|) and ``fused_mode = "scale"`` (pass 2 multiplies the
+recomputed update by a per-column factor instead of clipping), so
+``norm="l12"`` plans ride the two-HBM-pass fused and fused_sharded steps
+of ``kernels/fused_step`` / ``dist.projection``.
+
+Warm-start contract: identical to ``project_bilevel`` — any theta0 >= 0 is
+repaired by the unclamped bootstrap step; packed plans thread one theta
+per segment.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .l1inf import _prep, _post
+from .norms import l12_norm, project_l12_ball
+
+__all__ = [
+    "project_l12_newton",
+    "project_l12_stats",
+]
+
+
+class _L12SegOps:
+    """Segmented-Newton hooks of the l1,2 family (the ``_PlainSegOps``
+    contract of ``core.l1inf``) on per-column energies.
+
+    Structurally ``_BilevelSegOps`` with nu = ||y_j||_2 in place of
+    u = max_i |Y_ij| and a scaling ``finalize``: the active convention
+    (NOT (nu < theta), ties stay in the tangent with mu = 0) and the
+    ``from_colstats`` streaming hook carry over unchanged. Two class
+    attributes steer the fused step: ``colstats_stat = "sq"`` makes pass 1
+    accumulate sum u^2 into the colsum slot (colmax is unused), and
+    ``fused_mode = "scale"`` makes pass 2 multiply the recomputed update by
+    the per-column factor ``fused_scale`` derives from (aux, mu) — with
+    1.0 as the inside-ball identity sentinel where the clip families use
+    ``_MU_INF``.
+    """
+    uses_weights = False
+    colstats_stat = "sq"      # pass-1 colsum accumulates sum u^2 (not sum|u|)
+    fused_mode = "scale"      # pass-2 multiplies by a factor (not a clip)
+
+    @staticmethod
+    def prepare(A, w=None):
+        # A = |Y|, so sum A^2 = sum Y^2: the column energies
+        return {"nu": jnp.sqrt(jnp.sum(A * A, axis=0))}
+
+    @staticmethod
+    def from_colstats(colsum, colmax, w=None):
+        # streaming twin of prepare: under colstats_stat="sq" the colsum
+        # slot arrives as sum_i u_ij^2, so aux is just its square root
+        return {"nu": jnp.sqrt(colsum)}
+
+    @staticmethod
+    def stats(aux, th_col):
+        nu = aux["nu"]
+        active = jnp.logical_not(nu < th_col)
+        mu = jnp.maximum(nu - th_col, 0.0)
+        return nu, jnp.ones_like(nu), active, mu
+
+    @staticmethod
+    def stats0(aux):
+        return aux["nu"], jnp.ones_like(aux["nu"])
+
+    @staticmethod
+    def colnorm(aux):
+        return aux["nu"]
+
+    @staticmethod
+    def death(aux):
+        # a column dies as soon as theta passes its energy
+        return aux["nu"]
+
+    @staticmethod
+    def finalize(Ydt, A, mu):
+        nu = jnp.sqrt(jnp.sum(A * A, axis=0))
+        tiny = jnp.finfo(Ydt.dtype).tiny
+        scale = jnp.where(nu > 0, mu / jnp.maximum(nu, tiny), 0.0)
+        return Ydt * scale[None, :]
+
+    @staticmethod
+    def fused_scale(aux, mu):
+        # per-column multiplier for the fused pass 2 (mode="scale"):
+        # x_j = u_j * mu_j / nu_j, zero-energy columns stay zero
+        nu = aux["nu"]
+        tiny = jnp.finfo(nu.dtype).tiny
+        return jnp.where(nu > 0, mu / jnp.maximum(nu, tiny), 0.0)
+
+
+def _l12_impl(Yt, C, dt, theta0, max_iter):
+    """Shared Newton body on the column-energy vector: (X, theta, iters).
+
+    Mirrors ``core.bilevel._bilevel_impl`` structurally (cold bound,
+    bootstrap repair, monotone ascent, carried mu) so theta threads
+    interchangeably between the per-matrix and packed segmented forms.
+    """
+    A = jnp.abs(Yt)
+    n, m = A.shape
+    nu = jnp.sqrt(jnp.sum(A * A, axis=0))
+    norm = jnp.sum(nu)
+    tiny = jnp.finfo(dt).tiny
+
+    Csafe = jnp.where(C > 0, C, jnp.asarray(1.0, dt))
+    cold = jnp.maximum((norm - Csafe) / m, 0.0)
+    if theta0 is None:
+        start = cold
+    else:
+        start = jnp.maximum(jnp.maximum(jnp.asarray(theta0, dt), 0.0), cold)
+
+    def eval_step(th):
+        active = jnp.logical_not(nu < th)
+        Aa = jnp.sum(jnp.where(active, nu, 0.0))
+        Ba = jnp.sum(active.astype(dt))
+        new = (Aa - Csafe) / jnp.maximum(Ba, tiny)
+        mu = jnp.where(active, jnp.maximum(nu - th, 0.0), 0.0)
+        return new, mu
+
+    t1 = jnp.maximum(eval_step(start)[0], cold)
+    t2, mu1 = eval_step(t1)
+    t2 = jnp.maximum(t2, t1)
+
+    def cond(carry):
+        i, th, prev, _ = carry
+        return jnp.logical_and(i < max_iter, th > prev)
+
+    def body(carry):
+        i, th, _, _ = carry
+        new, mu = eval_step(th)
+        return (i + 1, jnp.maximum(new, th), th, mu)
+
+    iters, theta, prev, mu = jax.lax.while_loop(
+        cond, body, (jnp.asarray(2, jnp.int32), t2, t1, mu1))
+    mu = jax.lax.cond(theta > prev,
+                      lambda: eval_step(theta)[1],
+                      lambda: mu)
+
+    scale = jnp.where(nu > 0, mu / jnp.maximum(nu, tiny), 0.0)
+    X = Yt * scale[None, :]
+    inside = norm <= C
+    X = jnp.where(inside, Yt, X)
+    X = jnp.where(C > 0, X, jnp.zeros_like(X))
+    theta_out = jnp.where(C > 0,
+                          jnp.where(inside, jnp.zeros_like(theta), theta),
+                          jnp.max(nu, initial=0.0))
+    return X, theta_out, iters
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "max_iter"))
+def project_l12_newton(Y: jnp.ndarray, C, axis: int = 0, max_iter: int = 32,
+                       *, theta0: Optional[jnp.ndarray] = None
+                       ) -> jnp.ndarray:
+    """Newton-form l1,2 projection of Y (column l2 over `axis`) at radius C.
+
+    Sort-free: one energy sweep, a monotone Newton on the (m,) energy
+    vector (<= ~10 O(m) iterations, 1-2 with a ``theta0`` warm start), and
+    one scale sweep. Matches ``project_l12_ball`` to fp tolerance on any
+    input. Inside the ball the operator is the identity; C <= 0 maps to
+    zero — the same gating as ``project_l1inf_newton``.
+
+    >>> X = project_l12_newton(Y, 1.0)      # sum_j ||x_j||_2 <= 1
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    X, _, _ = _l12_impl(Yt, C, dt, theta0, max_iter)
+    return _post(X, Y, transpose)
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "max_iter"))
+def project_l12_stats(Y: jnp.ndarray, C, axis: int = 0, max_iter: int = 32,
+                      *, theta0: Optional[jnp.ndarray] = None):
+    """Like ``project_l12_newton`` but returns (X, {"theta", "iters"}).
+
+    >>> X, st = project_l12_stats(Y, 1.0)   # st["theta"] warm-starts a re-solve
+    """
+    Yt, transpose, dt = _prep(Y, axis)
+    C = jnp.asarray(C, dtype=dt)
+    X, theta, iters = _l12_impl(Yt, C, dt, theta0, max_iter)
+    return _post(X, Y, transpose), {"theta": theta, "iters": iters}

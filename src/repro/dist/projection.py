@@ -286,6 +286,8 @@ def fused_plan_sharded(plan: PackedPlan, mesh: Mesh,
     owned = sp.virtual_owned_cols()
     G = plan.num_segments
     fam = get_family(plan.family)
+    stat = getattr(fam.seg_ops, "colstats_stat", "abs")
+    mode = getattr(fam.seg_ops, "fused_mode", "clip")
     if theta0 is None:
         theta0 = jnp.zeros((G,), jnp.float32)
     sc = {"lr_t": jnp.asarray(lr_t, jnp.float32),
@@ -307,7 +309,7 @@ def fused_plan_sharded(plan: PackedPlan, mesh: Mesh,
             mn, vn, cs, cm = fused_adam_colstats(
                 g, m, v, p, cfg=acfg, lr_t=sc["lr_t"], b1c=sc["b1c"],
                 b2c=sc["b2c"], scale=sc.get("scale"), mask=mk,
-                transpose=e.transpose)
+                transpose=e.transpose, stat=stat)
             new_m.append(mn)
             new_v.append(vn)
             sums.append(cs.reshape(-1))
@@ -322,8 +324,13 @@ def fused_plan_sharded(plan: PackedPlan, mesh: Mesh,
         # fold the identity/zero segment gating into the clip level, as in
         # the single-device fused step — no padding exists in the dense
         # layout, so the lookups need no sentinel extension
-        mu_eff = jnp.where(zero_seg[sids_a], 0.0,
-                           jnp.where(inside_seg[sids_a], _MU_INF, mu))
+        if mode == "scale":
+            lvl = fam.seg_ops.fused_scale(aux, mu)
+            mu_eff = jnp.where(zero_seg[sids_a], 0.0,
+                               jnp.where(inside_seg[sids_a], 1.0, lvl))
+        else:
+            mu_eff = jnp.where(zero_seg[sids_a], 0.0,
+                               jnp.where(inside_seg[sids_a], _MU_INF, mu))
         # pass 2, rank-local: recompute u from the just-written moments,
         # clip at mu — the step's only param write, shard still resident
         new_p, off = [], 0
@@ -335,7 +342,7 @@ def fused_plan_sharded(plan: PackedPlan, mesh: Mesh,
             new_p.append(fused_adam_clip_apply(
                 mn, vn, p, mu_leaf, cfg=acfg, lr_t=sc["lr_t"],
                 b1c=sc["b1c"], b2c=sc["b2c"], mask=mk,
-                transpose=e.transpose))
+                transpose=e.transpose, mode=mode))
         return tuple(new_p), tuple(new_m), tuple(new_v), theta, iters
 
     leaf_specs = tuple(_leaf_spec(e, sh, axis_names)

@@ -68,7 +68,7 @@ def _adam_u(sc_ref, g, m, v, p, mk, mo_ref, vo_ref, *, b1, b2, eps, wd,
 
 
 def _adam_colstats_kernel(sc_ref, g_ref, m_ref, v_ref, p_ref, *rest,
-                          b1, b2, eps, wd, has_mask, transpose):
+                          b1, b2, eps, wd, has_mask, transpose, stat):
     if has_mask:
         mk_ref, mo_ref, vo_ref, sum_ref, max_ref = rest
         mk = mk_ref[0]
@@ -81,7 +81,7 @@ def _adam_colstats_kernel(sc_ref, g_ref, m_ref, v_ref, p_ref, *rest,
                 with_moment_update=True)
     a = jnp.abs(u.astype(jnp.float32))
     red = 1 if transpose else 0
-    psum = jnp.sum(a, axis=red)[None, :]
+    psum = jnp.sum(a * a if stat == "sq" else a, axis=red)[None, :]
     pmax = jnp.max(a, axis=red)[None, :]
 
     @pl.when(i == 0)
@@ -96,7 +96,7 @@ def _adam_colstats_kernel(sc_ref, g_ref, m_ref, v_ref, p_ref, *rest,
 
 
 def _adam_clip_apply_kernel(sc_ref, m_ref, v_ref, p_ref, mu_ref, *rest,
-                            b1, b2, eps, wd, has_mask, transpose):
+                            b1, b2, eps, wd, has_mask, transpose, mode):
     if has_mask:
         mk_ref, x_ref = rest
         mk = mk_ref[0]
@@ -109,7 +109,10 @@ def _adam_clip_apply_kernel(sc_ref, m_ref, v_ref, p_ref, mu_ref, *rest,
     uf = u.astype(jnp.float32)
     mu = mu_ref[0]                                    # (bm,)
     mu_b = mu[:, None] if transpose else mu[None, :]
-    x = jnp.sign(uf) * jnp.minimum(jnp.abs(uf), mu_b)
+    if mode == "scale":
+        x = uf * mu_b
+    else:
+        x = jnp.sign(uf) * jnp.minimum(jnp.abs(uf), mu_b)
     if mk is not None:
         x = x * mk.astype(jnp.float32)
     x_ref[0] = x.astype(x_ref.dtype)
@@ -149,13 +152,15 @@ _STAT_SPEC = lambda bm: pl.BlockSpec((1, bm), lambda l, j, i, sc: (l, j))
 
 
 def adam_colstats(sc, g, m, v, p, mask=None, *, moment_dtype,
-                  b1, b2, eps, wd, transpose: bool,
+                  b1, b2, eps, wd, transpose: bool, stat: str = "abs",
                   interpret: bool = False):
     """Pass-1 launch on padded (L, Rp, Cp) views (see module docstring).
 
     ``sc``: (4,) f32 traced scalars [clip_scale, lr_t, b1c, b2c]. Returns
     (m_new, v_new (L, Rp, Cp) in ``moment_dtype``, colsum, colmax (L, mcols)
-    f32). Rp must be a multiple of 16 and Cp of 128 (``ops.py`` pads).
+    f32). ``stat``: "abs" accumulates sum |u| into colsum, "sq" sum u^2
+    (l1,2 column energies). Rp must be a multiple of 16 and Cp of 128
+    (``ops.py`` pads).
     """
     L, Rp, Cp = p.shape
     bm, bn, tail = _tiles(Rp, Cp, transpose)
@@ -163,7 +168,7 @@ def adam_colstats(sc, g, m, v, p, mask=None, *, moment_dtype,
     mcols = Rp if transpose else Cp
     kern = functools.partial(_adam_colstats_kernel, b1=b1, b2=b2, eps=eps,
                              wd=wd, has_mask=mask is not None,
-                             transpose=transpose)
+                             transpose=transpose, stat=stat)
     data = lambda: _data_spec(bm, bn, transpose)
     in_specs = [data(), data(), data(), data()]
     args = [g, m, v, p]
@@ -189,20 +194,21 @@ def adam_colstats(sc, g, m, v, p, mask=None, *, moment_dtype,
 
 
 def adam_clip_apply(sc, m, v, p, mu, mask=None, *,
-                    b1, b2, eps, wd, transpose: bool,
+                    b1, b2, eps, wd, transpose: bool, mode: str = "clip",
                     interpret: bool = False):
     """Pass-2 launch: clipped params (L, Rp, Cp) in p's dtype.
 
     ``mu``: (L, mcols) f32 per-column clip level (sentinel-folded by the
-    engine: 1e30 = identity, 0 = dead column). Same padding contract as
-    ``adam_colstats``.
+    engine: 1e30 = identity, 0 = dead column). ``mode``: "clip" writes
+    sign(u) * min(|u|, mu), "scale" writes u * mu (per-column multiplier,
+    identity sentinel 1.0). Same padding contract as ``adam_colstats``.
     """
     L, Rp, Cp = p.shape
     bm, bn, tail = _tiles(Rp, Cp, transpose)
     grid = (L,) + tail
     kern = functools.partial(_adam_clip_apply_kernel, b1=b1, b2=b2, eps=eps,
                              wd=wd, has_mask=mask is not None,
-                             transpose=transpose)
+                             transpose=transpose, mode=mode)
     data = lambda: _data_spec(bm, bn, transpose)
     in_specs = [data(), data(), data(), _STAT_SPEC(bm)]
     args = [m, v, p, mu]

@@ -69,6 +69,7 @@ def _scalars(scale, lr_t, b1c, b2c):
 
 def fused_adam_colstats(g, m, v, p, *, cfg, lr_t, b1c, b2c,
                         scale=None, mask=None, transpose: bool = False,
+                        stat: str = "abs",
                         impl: str = "auto", interpret=None):
     """Pass 1 of the fused step: Adam moments + Newton column statistics.
 
@@ -79,17 +80,23 @@ def fused_adam_colstats(g, m, v, p, *, cfg, lr_t, b1c, b2c,
     multiplier (``optim.adam.clip_scale``); ``mask``: optional {0,1} leaf
     (Algorithm-3 freeze — zeroes grads AND the whole step); ``transpose``:
     True when the spec's max axis is the trailing dim (canonical columns
-    are then the second-to-last dim). Returns ``(m_new, v_new, colsum,
-    colmax)`` — moments with the leaf's shape/``moment_dtype``, statistics
-    f32 (lead, m) of the updated-but-never-written values |u|.
+    are then the second-to-last dim); ``stat``: what the colsum slot
+    accumulates — ``"abs"`` (sum |u|) or ``"sq"`` (sum u^2, the l1,2
+    family's column energies; the family's ``colstats_stat`` attribute
+    picks this). Returns ``(m_new, v_new, colsum, colmax)`` — moments with
+    the leaf's shape/``moment_dtype``, statistics f32 (lead, m) of the
+    updated-but-never-written values |u|.
 
     >>> mn, vn, cs, cm = fused_adam_colstats(g, m, v, p, cfg=acfg,
     ...     lr_t=1e-3, b1c=b1c, b2c=b2c, transpose=True)
     """
+    if stat not in ("abs", "sq"):
+        raise ValueError(f"unknown stat {stat!r} (abs | sq)")
     if _resolve(impl) == "ref":
         return ref.adam_colstats_ref(g, m, v, p, cfg=cfg, lr_t=lr_t,
                                      b1c=b1c, b2c=b2c, scale=scale,
-                                     mask=mask, transpose=transpose)
+                                     mask=mask, transpose=transpose,
+                                     stat=stat)
     shape = p.shape
     R, C = shape[-2:]
     Rp, Cp = _padded_dims(shape)
@@ -98,7 +105,7 @@ def fused_adam_colstats(g, m, v, p, *, cfg, lr_t, b1c, b2c,
     m_new, v_new, colsum, colmax = _k.adam_colstats(
         _scalars(scale, lr_t, b1c, b2c), pad(g), pad(m), pad(v), pad(p), mk,
         moment_dtype=cfg.moment_dtype, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
-        wd=cfg.weight_decay, transpose=transpose,
+        wd=cfg.weight_decay, transpose=transpose, stat=stat,
         interpret=(jax.default_backend() != "tpu"
                    if interpret is None else interpret))
     mcols = R if transpose else C
@@ -109,6 +116,7 @@ def fused_adam_colstats(g, m, v, p, *, cfg, lr_t, b1c, b2c,
 
 def fused_adam_clip_apply(m, v, p, mu, *, cfg, lr_t, b1c, b2c,
                           mask=None, transpose: bool = False,
+                          mode: str = "clip",
                           impl: str = "auto", interpret=None):
     """Pass 2 of the fused step: recompute the update, clip, write params.
 
@@ -116,17 +124,22 @@ def fused_adam_clip_apply(m, v, p, mu, *, cfg, lr_t, b1c, b2c,
     what keeps the two passes bit-consistent — see ``ref.py``); ``p``: the
     ORIGINAL (pre-step) params; ``mu``: (lead, m) f32 per-column clip level
     with the engine's gating folded in (1e30-class sentinel = segment
-    inside the ball -> identity; 0 = dead column). Other args as in
+    inside the ball -> identity; 0 = dead column). ``mode``: ``"clip"``
+    writes sign(u) * min(|u|, mu); ``"scale"`` writes u * mu with mu a
+    per-column multiplier (the l1,2 family's ``fused_mode``; identity
+    sentinel 1.0, dead column 0.0). Other args as in
     ``fused_adam_colstats``. Returns the projected params (leaf shape and
     dtype) — the only param write of the whole step.
 
     >>> p_new = fused_adam_clip_apply(mn, vn, p, mu, cfg=acfg,
     ...     lr_t=1e-3, b1c=b1c, b2c=b2c)
     """
+    if mode not in ("clip", "scale"):
+        raise ValueError(f"unknown mode {mode!r} (clip | scale)")
     if _resolve(impl) == "ref":
         return ref.adam_clip_apply_ref(m, v, p, mu, cfg=cfg, lr_t=lr_t,
                                        b1c=b1c, b2c=b2c, mask=mask,
-                                       transpose=transpose)
+                                       transpose=transpose, mode=mode)
     shape = p.shape
     R, C = shape[-2:]
     Rp, Cp = _padded_dims(shape)
@@ -139,7 +152,7 @@ def fused_adam_clip_apply(m, v, p, mu, *, cfg, lr_t, b1c, b2c,
     x = _k.adam_clip_apply(
         _scalars(None, lr_t, b1c, b2c), pad(m), pad(v), pad(p), mu3, mk,
         b1=cfg.b1, b2=cfg.b2, eps=cfg.eps, wd=cfg.weight_decay,
-        transpose=transpose,
+        transpose=transpose, mode=mode,
         interpret=(jax.default_backend() != "tpu"
                    if interpret is None else interpret))
     return x[:, :R, :C].reshape(shape)

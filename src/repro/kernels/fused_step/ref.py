@@ -49,12 +49,15 @@ def _u_from_moments(m_st, v_st, p, cfg, lr_t, b1c, b2c, mask):
 
 
 def adam_colstats_ref(g, m, v, p, *, cfg, lr_t, b1c, b2c,
-                      scale=None, mask=None, transpose=False):
+                      scale=None, mask=None, transpose=False, stat="abs"):
     """Pass 1: Adam moments + per-column (sum, max) of |u| — u never stored.
 
     Returns (m_new, v_new, colsum, colmax): moments in ``cfg.moment_dtype``
     with the leaf's shape, stats f32 (lead, m) over the canonical columns
     (the trailing dim, or the second-to-last when ``transpose``).
+    ``stat``: what the colsum slot accumulates — ``"abs"`` (sum |u|, the
+    l1,inf families) or ``"sq"`` (sum u^2, the l1,2 family's column
+    energies; colmax stays max |u| either way).
     """
     shape = p.shape
     g3, m3, v3, p3 = _view3(g), _view3(m), _view3(v), _view3(p)
@@ -71,19 +74,22 @@ def adam_colstats_ref(g, m, v, p, *, cfg, lr_t, b1c, b2c,
     u = _u_from_moments(m_st, v_st, p3, cfg, lr_t, b1c, b2c, mk3)
     a = jnp.abs(u.astype(jnp.float32))
     red = 2 if transpose else 1
-    colsum = jnp.sum(a, axis=red)
+    colsum = jnp.sum(a * a if stat == "sq" else a, axis=red)
     colmax = jnp.max(a, axis=red)
     return m_st.reshape(shape), v_st.reshape(shape), colsum, colmax
 
 
 def adam_clip_apply_ref(m_st, v_st, p, mu, *, cfg, lr_t, b1c, b2c,
-                        mask=None, transpose=False):
+                        mask=None, transpose=False, mode="clip"):
     """Pass 2: recompute u from the stored moments, clip at mu, write params.
 
     ``mu``: (lead, m) f32 per-column clip level over the canonical columns
     (1e30-class sentinel = identity, 0 = column zeroed — the engine folds
-    the inside/zero segment gating into mu). Returns the clipped params in
-    the leaf's shape/dtype.
+    the inside/zero segment gating into mu). ``mode``: ``"clip"`` writes
+    sign(u) * min(|u|, mu) (the l1,inf families); ``"scale"`` writes
+    u * mu, mu being a per-column multiplier (the l1,2 family; identity
+    sentinel is 1.0, dead column 0.0). Returns the clipped params in the
+    leaf's shape/dtype.
     """
     shape = p.shape
     m3, v3, p3 = _view3(m_st), _view3(v_st), _view3(p)
@@ -91,7 +97,10 @@ def adam_clip_apply_ref(m_st, v_st, p, mu, *, cfg, lr_t, b1c, b2c,
     u = _u_from_moments(m3, v3, p3, cfg, lr_t, b1c, b2c, mk3)
     uf = u.astype(jnp.float32)
     mu_b = mu[:, :, None] if transpose else mu[:, None, :]
-    x = jnp.sign(uf) * jnp.minimum(jnp.abs(uf), mu_b)
+    if mode == "scale":
+        x = uf * mu_b
+    else:
+        x = jnp.sign(uf) * jnp.minimum(jnp.abs(uf), mu_b)
     if mk3 is not None:
         x = x * mk3.astype(jnp.float32)
     return x.astype(p.dtype).reshape(shape)

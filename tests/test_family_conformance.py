@@ -1,0 +1,383 @@
+"""Property-based conformance harness over EVERY registered family (PR 10).
+
+Every constraint family in ``core.families`` must pass the same battery:
+feasibility after projection, agreement with its independent reference
+(the KKT witness — the reference is exact), idempotence, identity inside
+the ball, warm-started iteration bounds, and theta equality across the
+engine solvers a family can run under. The harness is registry-driven:
+``test_registry_coverage_fails_loudly`` walks ``family_names()`` /
+``registered_norms()`` and FAILS if a future family registers without a
+``CASES`` entry — adding a family forces adding its conformance row.
+
+Inputs are adversarial on purpose: n = 1 and m = 1 matrices, ragged
+shapes, exact ties (quantized values), bf16 leaves, all-zero leaves, and
+(through the packed/mixed tests) stacked ndim > 2 leaves.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import (ProjectionEngine, ProjectionSpec, apply_constraints,
+                        engine_counters, engine_counters_reset,
+                        project_segmented_family)
+from repro.core.constraints import build_packed_plans
+from repro.core.families import (family_names, get_family, packable_norms,
+                                 registered_norms)
+
+
+# ---------------------------------------------------------------------------
+# the per-family conformance registry (one row per family — enforced below)
+# ---------------------------------------------------------------------------
+# norms:      every ProjectionSpec.norm string the family serves (coverage)
+# weights:    m -> per-column weight tuple, or None (weight-aware families)
+# tie_ref:    reference comparison is valid on exact-tie inputs (hoyer's
+#             alternating solve settles degenerate all-equal ties on the
+#             hyperplane midpoint — documented in core/hoyer.py)
+# ref_metric: "exact" — elementwise agreement with the reference (convex
+#             balls: the projection is unique); "distance" — per-column
+#             near-optimality ||Y - X|| <= ||Y - X_ref|| (1 + eps) (hoyer:
+#             the set is NONCONVEX, the alternating solve may pick a
+#             marginally different support than the exact closed form)
+# tol:        f32 agreement tolerance vs the reference
+# feas:       optional override (Y, X, C, axis, w, loose) -> None asserting
+#             the family's OWN feasibility contract, for families whose
+#             operator is not a norm-ball projection (l1inf_masked zeroes
+#             the dominated support but never clips survivors — Eq. 20)
+
+
+def _masked_feas(Y, X, C, axis, w, loose):
+    from repro.core import l1inf_column_mask, l1inf_norm
+    Yf = jnp.asarray(Y, jnp.float32)
+    if float(l1inf_norm(Yf, axis=axis)) <= C:
+        np.testing.assert_array_equal(_f32(X), _f32(Y))
+        return
+    alive = np.asarray(l1inf_column_mask(Yf, C, axis=axis))
+    bc = alive[None, :] if axis in (0, -2) else alive[:, None]
+    np.testing.assert_array_equal(_f32(X), _f32(Y) * bc)
+
+
+CASES = {
+    "l1inf": dict(norms=("l1inf", "l1inf_sorted"), weights=None,
+                  tie_ref=True, ref_metric="exact", tol=5e-6),
+    "l1inf_weighted": dict(norms=("l1inf_weighted",),
+                           weights=lambda m: tuple(
+                               float(x) for x in np.linspace(0.5, 2.0, m)),
+                           tie_ref=True, ref_metric="exact", tol=5e-6),
+    "l1inf_masked": dict(norms=("l1inf_masked",), weights=None,
+                         tie_ref=True, ref_metric="exact", tol=5e-6,
+                         feas=_masked_feas),
+    "bilevel": dict(norms=("bilevel",), weights=None, tie_ref=True,
+                    ref_metric="exact", tol=5e-6),
+    "l12": dict(norms=("l12",), weights=None, tie_ref=True,
+                ref_metric="exact", tol=5e-6),
+    "hoyer": dict(norms=("hoyer",), weights=None, tie_ref=False,
+                  ref_metric="distance", tol=5e-3),
+}
+
+# (shape, max axis, input kind) — n=1, m=1, ragged, ties, bf16, zeros
+INPUTS = [
+    ((32, 32), 0, "normal"),
+    ((8, 200), 0, "normal"),
+    ((200, 8), 1, "normal"),
+    ((1, 64), 0, "normal"),
+    ((50, 1), 0, "normal"),
+    ((13, 37), 0, "ties"),
+    ((24, 48), 1, "ties"),
+    ((24, 48), 0, "bf16"),
+    ((16, 24), 0, "zeros"),
+]
+
+HOYER_S = 0.75          # hoyer's "radius" is the target sparseness ratio
+
+
+def _gen(shape, kind, seed):
+    rng = np.random.default_rng(seed)
+    Y = rng.standard_normal(shape) * 3.0
+    if kind == "ties":
+        Y = np.round(Y * 2.0) / 2.0          # exact ties, exact zeros
+    if kind == "zeros":
+        Y = np.zeros(shape)
+    dt = jnp.bfloat16 if kind == "bf16" else jnp.float32
+    return jnp.asarray(Y, dt)
+
+
+def _cols(shape, axis):
+    return shape[1] if axis in (0, -2) else shape[0]
+
+
+def _weights(case, m):
+    fn = case["weights"]
+    return None if fn is None else jnp.asarray(fn(m), jnp.float32)
+
+
+def _radius(fam, Y, axis, w, frac=0.35):
+    if fam.name == "hoyer":
+        return HOYER_S
+    nv = float(fam.norm_fn(jnp.asarray(Y, jnp.float32), axis, w))
+    return max(frac * nv, 1e-3)
+
+
+def _f32(x):
+    return np.asarray(x, np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fail-loudly coverage: registering a family without a CASES row breaks CI
+# ---------------------------------------------------------------------------
+
+def test_registry_coverage_fails_loudly():
+    missing = set(family_names()) - set(CASES)
+    assert not missing, (
+        f"families registered without conformance coverage: {sorted(missing)}"
+        " — add a CASES row in tests/test_family_conformance.py")
+    extra = set(CASES) - set(family_names())
+    assert not extra, f"CASES rows for unregistered families: {sorted(extra)}"
+    covered = {n for c in CASES.values() for n in c["norms"]}
+    missing_norms = registered_norms() - covered
+    assert not missing_norms, (
+        f"registered norms without conformance coverage: "
+        f"{sorted(missing_norms)}")
+    for name, case in CASES.items():
+        declared = set(get_family(name).norms)
+        assert set(case["norms"]) == declared, (
+            f"CASES[{name!r}] norms {sorted(case['norms'])} != the family's "
+            f"declared norms {sorted(declared)}")
+
+
+# ---------------------------------------------------------------------------
+# per-leaf battery: feasibility, KKT/reference, idempotence, identity inside
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fname", sorted(CASES))
+def test_leaf_conformance(fname):
+    fam = get_family(fname)
+    case = CASES[fname]
+    for si, (shape, axis, kind) in enumerate(INPUTS):
+        Y = _gen(shape, kind, seed=100 + si)
+        w = _weights(case, _cols(shape, axis))
+        C = _radius(fam, Y, axis, w)
+        X = fam.project_leaf(Y, C, axis, w)
+        assert X.shape == Y.shape and X.dtype == Y.dtype, (fname, shape, kind)
+        loose = kind == "bf16"
+        tol = 5e-2 if loose else case["tol"]
+        Xf = jnp.asarray(X, jnp.float32)
+        ctx = f"{fname} {shape} axis={axis} {kind}"
+        if case.get("feas") is not None:
+            case["feas"](Y, X, C, axis, w, loose)
+        elif fam.feasible is not None:
+            if loose:
+                # bf16 rounding of the f32 solution moves the ratio ~1e-2;
+                # norm_fn reports hoyer's min column sparseness
+                assert float(fam.norm_fn(Xf, axis, w)) >= C - 2e-2, ctx
+            else:
+                assert bool(fam.feasible(Xf, C, axis, w)), ctx
+        else:
+            nX = float(fam.norm_fn(Xf, axis, w))
+            nY = float(fam.norm_fn(jnp.asarray(Y, jnp.float32), axis, w))
+            assert nX <= C * (1 + (3e-2 if loose else 1e-4)), ctx
+            if nY > C * 1.01:           # binding: KKT puts X on the sphere
+                assert nX >= C * (1 - (3e-2 if loose else 1e-3)), ctx
+        if case["tie_ref"] or kind != "ties":
+            Xr = fam.reference(Y, C, axis, w)
+            if case["ref_metric"] == "distance":
+                d = np.sum((_f32(Y) - _f32(X)) ** 2, axis=axis)
+                d_ref = np.sum((_f32(Y) - _f32(Xr)) ** 2, axis=axis)
+                assert np.all(d <= d_ref * (1 + tol) + 1e-6), (
+                    ctx, float(np.max(d - d_ref)))
+            else:
+                np.testing.assert_allclose(_f32(X), _f32(Xr), atol=tol,
+                                           rtol=tol, err_msg=ctx)
+        X2 = fam.project_leaf(X, C, axis, w)
+        np.testing.assert_allclose(_f32(X2), _f32(X), atol=tol, rtol=tol,
+                                   err_msg=ctx + " (idempotence)")
+        if kind == "zeros":
+            np.testing.assert_array_equal(_f32(X), _f32(Y), err_msg=ctx)
+
+
+@pytest.mark.parametrize("fname", sorted(CASES))
+def test_leaf_identity_inside_ball(fname):
+    fam = get_family(fname)
+    case = CASES[fname]
+    Y = _gen((24, 40), "normal", seed=7)
+    w = _weights(case, 40)
+    if fname == "hoyer":
+        # pre-project to sigma >= s, then ask for a LOWER target: identity
+        Y = fam.project_leaf(Y, HOYER_S, 0, w)
+        X = fam.project_leaf(Y, HOYER_S - 0.1, 0, w)
+    else:
+        C = 2.0 * float(fam.norm_fn(Y, 0, w))
+        X = fam.project_leaf(Y, C, 0, w)
+    np.testing.assert_array_equal(_f32(X), _f32(Y))
+
+
+# ---------------------------------------------------------------------------
+# packed battery: every applicable solver, warm starts, theta equality
+# ---------------------------------------------------------------------------
+
+PACKABLE = tuple(f for f in sorted(CASES)
+                 if get_family(f).seg_ops is not None)
+
+
+def _ragged_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.standard_normal((20, 30)) * 2, jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((3, 12, 18)) * 2,
+                             jnp.float32),
+            "c": jnp.asarray(rng.standard_normal((20, 5)) * 2, jnp.float32)}
+
+
+def _specs_for(fname, params, frac=0.3):
+    fam = get_family(fname)
+    case = CASES[fname]
+    specs = []
+    for k in sorted(params):
+        v = params[k]
+        m = v.shape[-1]
+        wt = case["weights"](m) if case["weights"] is not None else None
+        wj = None if wt is None else jnp.asarray(wt, jnp.float32)
+        slices = np.asarray(v, np.float32).reshape((-1,) + v.shape[-2:])
+        nv = min(float(fam.norm_fn(jnp.asarray(s), 0, wj)) for s in slices)
+        kw = {"weights": wt} if wt is not None else {}
+        specs.append(ProjectionSpec(pattern=rf"^{k}$", norm=case["norms"][0],
+                                    radius=max(frac * nv, 1e-3), **kw))
+    return tuple(specs)
+
+
+@pytest.mark.parametrize("fname", PACKABLE)
+def test_packed_solvers_conformance(fname):
+    """Every packable family through newton | pallas | sharded: matches the
+    per-leaf reference path, warm restarts in the bootstrap pair, and
+    produces one theta the solvers agree on (switching solvers mid-run
+    keeps the warm start valid)."""
+    params = _ragged_params()
+    specs = _specs_for(fname, params)
+    ref = apply_constraints(params, specs)          # per-leaf project_leaf
+    key = f"{fname}_packed/k1"
+    mesh = Mesh(np.array(jax.devices()[:1]), ("d",))
+    engines = {"newton": ProjectionEngine(specs),
+               "pallas": ProjectionEngine(specs, solver="pallas"),
+               "sharded": ProjectionEngine(specs, solver="sharded",
+                                           mesh=mesh)}
+    has_kernel = get_family(fname).pallas_loader is not None
+    engine_counters_reset()
+    thetas = {}
+    for sname, eng in engines.items():
+        st0 = eng.init_state(params)
+        assert set(st0) == {key}
+        out, st, stats = eng.apply(params, state=st0, with_stats=True)
+        tol = 5e-4 if (sname == "pallas" and has_kernel) else 5e-6
+        for r, o in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(out)):
+            np.testing.assert_allclose(_f32(r), _f32(o), atol=tol, rtol=tol,
+                                       err_msg=f"{fname}/{sname}")
+        thetas[sname] = st[key]
+        # warm restart of the same problem: bootstrap pair only
+        _, _, stats2 = eng.apply(params, state=st, with_stats=True)
+        if not (sname == "pallas" and has_kernel):   # kernel iters = -1
+            assert int(stats2[key]) <= 2, (fname, sname, stats2)
+    counts = engine_counters()
+    for sname in engines:
+        assert counts[f"{key}/{sname}"] == 2, counts
+    assert "per_leaf" not in counts, counts
+    np.testing.assert_allclose(np.asarray(thetas["newton"]),
+                               np.asarray(thetas["sharded"]),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(thetas["newton"]),
+                               np.asarray(thetas["pallas"]),
+                               atol=1e-3 if has_kernel else 1e-6,
+                               rtol=1e-3 if has_kernel else 1e-6)
+    # solver SWITCH mid-run: newton's theta warm-starts the sharded solve
+    _, _, stats3 = engines["sharded"].apply(
+        params, state={key: thetas["newton"]}, with_stats=True)
+    assert int(stats3[key]) <= 2, (fname, stats3)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf-only families: the explicit non-packable fallback (hoyer)
+# ---------------------------------------------------------------------------
+
+def test_hoyer_is_per_leaf_only_and_unfusable():
+    assert "hoyer" in registered_norms()
+    assert "hoyer" not in packable_norms()
+    with pytest.raises(ValueError, match="per-leaf only"):
+        project_segmented_family(jnp.zeros((4, 4)), jnp.zeros((4,), jnp.int32),
+                                 jnp.ones((1,)), num_segments=1,
+                                 family="hoyer")
+    params = {"h": _gen((3, 16, 8), "normal", seed=11)}   # stacked ndim > 2
+    specs = (ProjectionSpec(pattern=r"^h$", norm="hoyer", radius=HOYER_S),)
+    plans, per_leaf = build_packed_plans(params, specs)
+    assert not plans and len(per_leaf) == 1
+    # fused engine must replay the per-leaf path bit-exactly (no megakernel)
+    engine_counters_reset()
+    out_n, _ = ProjectionEngine(specs).apply(params)
+    out_f, _ = ProjectionEngine(specs, solver="fused").apply(params)
+    counts = engine_counters()
+    assert not any(k.endswith("/fused") for k in counts), counts
+    np.testing.assert_array_equal(_f32(out_n["h"]), _f32(out_f["h"]))
+    from repro.core import hoyer_sparseness
+    for sl in np.asarray(out_n["h"], np.float32):
+        sig = hoyer_sparseness(jnp.asarray(sl))
+        assert float(jnp.min(sig)) >= HOYER_S - 1e-4
+
+
+# ---------------------------------------------------------------------------
+# mixed-family packing: one invocation per family sub-buffer (PR 10 sat. 4)
+# ---------------------------------------------------------------------------
+
+def test_mixed_family_packing_through_projected_update():
+    """l1inf + bilevel + l12 specs (plus a hoyer per-leaf rider) in ONE
+    projected_update: one packed invocation per family sub-buffer, warm
+    starts isolated under per-plan keys, every constraint enforced."""
+    from repro.optim import AdamConfig, adam_init
+
+    key = jax.random.PRNGKey(0)
+    params = {
+        "enc": {"w": jax.random.normal(jax.random.fold_in(key, 0), (24, 50))},
+        "mlp": {"w": jax.random.normal(jax.random.fold_in(key, 1),
+                                       (3, 16, 40))},
+        "dec": {"w": jax.random.normal(jax.random.fold_in(key, 2), (30, 20))},
+        "hoy": {"w": jax.random.normal(jax.random.fold_in(key, 3), (16, 10))},
+    }
+    specs = (ProjectionSpec(pattern=r"enc/w", norm="l1inf", radius=4.0),
+             ProjectionSpec(pattern=r"mlp/w", norm="bilevel", radius=2.0,
+                            axis=1),
+             ProjectionSpec(pattern=r"dec/w", norm="l12", radius=3.0),
+             ProjectionSpec(pattern=r"hoy/w", norm="hoyer", radius=HOYER_S))
+    acfg = AdamConfig(lr=1e-2)
+    engine = ProjectionEngine(specs)
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(9), p.shape), params)
+    opt = adam_init(params, acfg)
+    state = engine.init_state(params)
+    assert set(state) == {"l1inf_packed/k1", "bilevel_packed/k1",
+                          "l12_packed/k1"}       # hoyer carries no theta
+    assert state["bilevel_packed/k1"].shape == (3,)   # stacked leaf: 3 segs
+    assert state["l1inf_packed/k1"].shape == (1,)
+    assert state["l12_packed/k1"].shape == (1,)
+    engine_counters_reset()
+    step = jax.jit(lambda g, o, p, s: engine.projected_update(
+        g, o, p, acfg, state=s))
+    for _ in range(3):
+        params, opt, state = step(grads, opt, params, state)
+    counts = engine_counters()
+    # one invocation per family sub-buffer per trace (jit: traced once)
+    assert counts == {"l1inf_packed/k1/newton": 1,
+                      "bilevel_packed/k1/newton": 1,
+                      "l12_packed/k1/newton": 1,
+                      "per_leaf": 1}, counts
+    from repro.core import hoyer_sparseness, l12_norm, l1inf_norm
+    assert float(l1inf_norm(params["enc"]["w"])) <= 4.0 * (1 + 1e-5)
+    for sl in np.asarray(params["mlp"]["w"], np.float32):
+        assert float(l1inf_norm(jnp.asarray(sl), axis=1)) <= 2.0 * (1 + 1e-5)
+    assert float(l12_norm(params["dec"]["w"])) <= 3.0 * (1 + 1e-5)
+    assert float(jnp.min(hoyer_sparseness(params["hoy"]["w"]))) \
+        >= HOYER_S - 1e-4
+    # warm starts stay isolated per plan key, and re-projecting the
+    # (already feasible) updated params is the identity through the engine
+    out2, state2 = engine.apply(params, state=state)
+    assert set(state2) == set(state)
+    for a, b in zip(jax.tree_util.tree_leaves(params),
+                    jax.tree_util.tree_leaves(out2)):
+        np.testing.assert_allclose(_f32(a), _f32(b), atol=1e-5, rtol=1e-5)

@@ -273,6 +273,80 @@ def test_fused_bf16_params_fp32_moments_end_to_end():
         _tol(a, b)
 
 
+# ---------------------------------------------------------------------------
+# the l1,2 family through the megakernel (PR 10: stat="sq", mode="scale")
+# ---------------------------------------------------------------------------
+
+L12 = (ProjectionSpec(pattern=r"enc1/w", norm="l12", radius=4.0),
+       ProjectionSpec(pattern=r"blocks/w", norm="l12", radius=2.0, axis=1))
+
+
+def test_fused_equals_newton_l12():
+    """l1,2 qualifies for the two-pass megakernel (from_colstats streams
+    column energies); the fused step must match the packed Newton to fp
+    reduction order, counted under its own fused key."""
+    acfg = AdamConfig(lr=1e-2, weight_decay=0.01, clip_norm=1.0)
+    engine_counters_reset()
+    _assert_same_run(L12, acfg, tol=1e-5)
+    counts = engine_counters()
+    assert counts["l12_packed/k1/fused"] > 0
+    assert counts["l12_packed/k1/newton"] > 0   # the unfused twin's runs
+    engine_counters_reset()
+
+
+def test_fused_l12_bf16_params_fp32_moments():
+    params = jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.bfloat16), _tree(6))
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(8), p.shape,
+                                    jnp.float32).astype(jnp.bfloat16),
+        params)
+    acfg = AdamConfig(lr=1e-2, moment_dtype=jnp.float32)
+    outs = {}
+    for solver in ("newton", "fused"):
+        engine = ProjectionEngine(L12, solver=solver)
+        opt = adam_init(params, acfg)
+        state = engine.init_state(params)
+        p = params
+        for _ in range(3):
+            p, opt, state = jax.jit(
+                lambda g, o, pp, s: engine.projected_update(
+                    g, o, pp, acfg, state=s))(grads, opt, p, state)
+        outs[solver] = p
+    for a, b in zip(jax.tree_util.tree_leaves(outs["newton"]),
+                    jax.tree_util.tree_leaves(outs["fused"])):
+        assert a.dtype == b.dtype == jnp.bfloat16
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_fused_l12_warm_start_survives_solver_switch():
+    """Theta threads under ONE plan key whichever solver runs — switching
+    newton -> fused mid-run keeps the warm start: steady-state solves stay
+    in the bootstrap pair of Eq.-(19) evaluations."""
+    acfg = AdamConfig(lr=1e-3)
+    params = _tree(7)
+    grads = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(5), p.shape) * 0.01,
+        params)
+    opt = adam_init(params, acfg)
+    en = ProjectionEngine(L12)
+    ef = ProjectionEngine(L12, solver="fused")
+    state = en.init_state(params)
+    step_n = jax.jit(lambda g, o, p, s: en.projected_update(
+        g, o, p, acfg, state=s, with_stats=True))
+    step_f = jax.jit(lambda g, o, p, s: ef.projected_update(
+        g, o, p, acfg, state=s, with_stats=True))
+    for _ in range(4):
+        params, opt, state, stats = step_n(grads, opt, params, state)
+    iters = []
+    for _ in range(4):
+        params, opt, state, stats = step_f(grads, opt, params, state)
+        iters.append(int(stats["l12_packed/k1"]))
+    assert max(iters[1:]) <= 2, iters
+    assert all(float(v.min()) >= 0 for v in state.values())
+
+
 def test_fused_no_specs_passthrough():
     engine = ProjectionEngine((), solver="fused")
     params = _tree(5)

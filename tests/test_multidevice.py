@@ -245,6 +245,126 @@ def test_sharded_mixed_families_zero_allgather_and_match_gathered():
     assert "OK" in out
 
 
+def test_sharded_l12_and_hoyer_families():
+    """PR 10 families on a mesh: the l1,2 sharded solve keeps zero
+    all-gathers with its Newton while body doing exactly ONE stacked
+    f32[2, G] psum per evaluation, and its outputs/theta equal the gathered
+    solve; the fused_sharded l1,2 step (stat="sq" pass 1, scale-mode pass 2)
+    matches the gathered solver="fused" step; hoyer — per-leaf only —
+    solves sharded-vs-gathered equal with no all-gather (columns are
+    independent, so a column-sharded leaf never moves)."""
+    out = _run_subprocess(_WHILE_HELPER + textwrap.dedent("""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core import (ProjectionSpec, ProjectionEngine,
+                                init_projection_state)
+        from repro.optim.adam import AdamConfig, adam_init
+
+        rng = np.random.default_rng(0)
+        params = {
+            "blocks": {"w1": jnp.asarray(rng.normal(size=(4, 64, 256)),
+                                         jnp.float32)},
+            "enc": {"w": jnp.asarray(rng.normal(size=(128, 512)),
+                                     jnp.float32)},
+        }
+        specs = (ProjectionSpec(pattern=r"w1$", norm="l12", radius=16.0),
+                 ProjectionSpec(pattern=r"enc/w", norm="l12", radius=8.0))
+        mesh = jax.make_mesh((8,), ("data",))
+        sh = {
+            "blocks": {"w1": NamedSharding(mesh, P(None, "data", None))},
+            "enc": {"w": NamedSharding(mesh, P("data", None))},
+        }
+        params_s = jax.device_put(params, sh)
+        state0 = init_projection_state(params, specs)
+
+        # --- sharded packed Newton on column energies: zero all-gathers,
+        # one stacked f32[2, G] psum per Eq.-(19) evaluation
+        eng = ProjectionEngine(specs, solver="sharded", mesh=mesh)
+        fn = jax.jit(lambda p, s: eng.apply(p, state=s))
+        with mesh:
+            hlo = fn.lower(params_s, state0).compile().as_text()
+        ags = [l for l in hlo.splitlines() if re.search("all-gather", l)]
+        assert not ags, "\\n".join(ags[:5])
+        comm = {k: v for k, v in while_body_allreduces(hlo).items() if v}
+        assert len(comm) == 1, comm   # only the Newton loop communicates
+        (shapes,) = comm.values()
+        G = 4 + 1                     # 4 stacked w1 segments + enc
+        assert shapes == [f"f32[2,{G}]"], comm
+
+        with mesh:
+            out_s, st_s = fn(params_s, state0)
+        ref = ProjectionEngine(specs)       # gathered packed Newton
+        out_r, st_r = ref.apply(params, state=state0)
+        for a, b in zip(jax.tree_util.tree_leaves(out_r),
+                        jax.tree_util.tree_leaves(out_s)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-5, rtol=1e-5)
+        assert set(st_s) == {"l12_packed/k1"}
+        np.testing.assert_allclose(np.asarray(st_r["l12_packed/k1"]),
+                                   np.asarray(st_s["l12_packed/k1"]),
+                                   rtol=1e-6, atol=1e-6)
+
+        # --- fused_sharded: the two-pass megakernel with column energies
+        # (pass 1 stat="sq") and the scale-mode write (pass 2), rank-local
+        grads = jax.tree_util.tree_map(
+            lambda p: 0.01 * jnp.asarray(rng.normal(size=p.shape),
+                                         jnp.float32), params)
+        grads_s = jax.device_put(grads, sh)
+        acfg = AdamConfig(lr=1e-3)
+        opt = adam_init(params, acfg)
+        ref_eng = ProjectionEngine(specs, solver="fused")
+        shd_eng = ProjectionEngine(specs, solver="fused_sharded", mesh=mesh)
+        ref_step = jax.jit(lambda g, o, p, s: ref_eng.projected_update(
+            g, o, p, acfg, state=s))
+        shd_step = jax.jit(lambda g, o, p, s: shd_eng.projected_update(
+            g, o, p, acfg, state=s))
+        with mesh:
+            hlo_f = shd_step.lower(grads_s, opt, params_s,
+                                   state0).compile().as_text()
+        ags = [l for l in hlo_f.splitlines() if re.search("all-gather", l)]
+        assert not ags, "\\n".join(ags[:5])
+        comm = {k: v for k, v in while_body_allreduces(hlo_f).items() if v}
+        assert len(comm) == 1, comm
+        (shapes,) = comm.values()
+        assert shapes == [f"f32[2,{G}]"], comm
+        p_r, o_r, s_r = ref_step(grads, opt, params, state0)
+        with mesh:
+            p_s, o_s, s_s = shd_step(grads_s, opt, params_s, state0)
+        d = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree_util.tree_leaves(p_r),
+                                jax.tree_util.tree_leaves(p_s)))
+        td = float(jnp.max(jnp.abs(s_r["l12_packed/k1"]
+                                   - s_s["l12_packed/k1"])))
+        print("fused_sharded l12 param maxdiff", d, "theta maxdiff", td)
+        assert d <= 1e-5 and td <= 1e-5, (d, td)
+
+        # --- hoyer rides per-leaf under every solver: a column-sharded
+        # leaf solves rank-local (columns independent), no all-gather
+        hp = {"hoy": {"w": jnp.asarray(rng.normal(size=(64, 128)),
+                                       jnp.float32)}}
+        hspecs = (ProjectionSpec(pattern=r"hoy/w", norm="hoyer",
+                                 radius=0.75),)
+        hsh = {"hoy": {"w": NamedSharding(mesh, P(None, "data"))}}
+        hp_s = jax.device_put(hp, hsh)
+        heng = ProjectionEngine(hspecs, solver="sharded", mesh=mesh)
+        hfn = jax.jit(lambda p: heng.apply(p)[0])
+        with mesh:
+            hlo_h = hfn.lower(hp_s).compile().as_text()
+            out_h = hfn(hp_s)
+        ags = [l for l in hlo_h.splitlines() if re.search("all-gather", l)]
+        assert not ags, "\\n".join(ags[:5])
+        out_hr = ProjectionEngine(hspecs).apply(hp)[0]
+        np.testing.assert_allclose(np.asarray(out_hr["hoy"]["w"]),
+                                   np.asarray(out_h["hoy"]["w"]),
+                                   atol=1e-6, rtol=1e-6)
+        from repro.core import hoyer_sparseness
+        assert float(jnp.min(hoyer_sparseness(out_h["hoy"]["w"]))) \\
+            >= 0.75 - 1e-4
+        print("OK")
+    """))
+    assert "OK" in out
+
+
 def test_train_cell_projection_adds_no_full_weight_allgather():
     """lower_cell train HLO on an FSDP mesh: turning the projection ON must
     not add any all-gather at full-weight size (the sharded engine moves

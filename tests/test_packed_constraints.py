@@ -53,12 +53,16 @@ def test_packed_matches_per_leaf():
             _tol_equal(r, o)
     # dtype preserved per leaf
     assert out["dec"]["w"].dtype == jnp.bfloat16
-    # one plan, 1 + 3 + 1 = 5 segments (stacked leaf contributes 3)
+    # two plans: l1inf with 1 + 3 + 1 = 5 segments (stacked leaf contributes
+    # 3) and the l12 family's own single-segment plan (PR 10: l12 packs)
     plans, per_leaf = build_packed_plans(params, SPECS)
-    assert len(plans) == 1 and plans[0].num_segments == 5
-    assert len(per_leaf) == 1            # the l12 leaf falls back
-    assert set(state) == {plans[0].key}
-    assert state[plans[0].key].shape == (5,)
+    by_key = {p.key: p for p in plans}
+    assert set(by_key) == {"l1inf_packed/k1", "l12_packed/k1"}
+    assert by_key["l1inf_packed/k1"].num_segments == 5
+    assert by_key["l12_packed/k1"].num_segments == 1
+    assert not per_leaf                  # nothing falls back any more
+    assert set(state) == set(by_key)
+    assert state["l1inf_packed/k1"].shape == (5,)
 
 
 def test_packed_single_launch_per_step():
@@ -66,9 +70,11 @@ def test_packed_single_launch_per_step():
     constraints_mod.engine_counters_reset()
     apply_constraints_packed(params, SPECS)
     counts = constraints_mod.engine_counters()
-    # 3 packable leaves -> ONE packed engine invocation (+1 l12 fallback),
-    # counted under the plan's own key so parallel suites can't collide
-    assert counts == {"l1inf_packed/k1/newton": 1, "per_leaf": 1}
+    # 3 l1inf leaves -> ONE packed invocation, the l12 leaf -> its own
+    # family plan (one more), counted under per-plan keys so parallel
+    # suites can't collide
+    assert counts == {"l1inf_packed/k1/newton": 1,
+                      "l12_packed/k1/newton": 1}
     constraints_mod.engine_counters_reset()
     apply_constraints(params, SPECS)
     assert constraints_mod.engine_counters() == {"per_leaf": 4}
